@@ -1,0 +1,49 @@
+"""Paper Appendix C.1 / Fig. 16: cross-engine communication vs computation.
+
+The paper's PCIe measurement becomes an ICI measurement: from the cached
+dry-run artifacts, compare the bytes the distributed memory pipeline
+exchanges (index-only: 8B * k * shards) against (a) what a naive KV
+all-gather would move and (b) the end-to-end step's collective volume —
+reproducing the "three orders of magnitude" headroom claim.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import row
+from repro.configs import SHAPES, get_arch
+from repro.core.placement import ICI_BW
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run():
+    rows = []
+    for arch in ("qwen3-32b", "qwen2-vl-72b", "llama3.2-1b"):
+        cfg = get_arch(arch)
+        for shape_name in ("decode_32k", "long_500k"):
+            shape = SHAPES[shape_name]
+            shards = 16 if shape_name == "decode_32k" else 256
+            k = cfg.memory.top_k
+            idx_bytes = 8 * k * shards              # (score, index) pairs
+            kv_bytes = (shape.seq_len * cfg.n_kv_heads * cfg.hd * 2 * 2
+                        * shape.global_batch)       # full KV all-gather
+            rows.append(row(
+                f"appC_{arch}_{shape_name}_indexonly",
+                idx_bytes / ICI_BW,
+                f"bytes={idx_bytes};kv_allgather_bytes={kv_bytes};"
+                f"ratio={kv_bytes / idx_bytes:.0f}x"))
+            f = os.path.join(
+                DRYRUN, f"{arch}__{shape_name}__16x16__baseline.json")
+            if os.path.exists(f):
+                rec = json.load(open(f))
+                if rec.get("ok"):
+                    coll = rec["roofline"]["coll_bytes_per_dev"]
+                    rows.append(row(
+                        f"appC_{arch}_{shape_name}_step_collectives",
+                        coll / ICI_BW, f"bytes_per_dev={coll:.3e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,35 @@
+"""Paper Table 3: energy per request/token — DERIVED from the roofline time
+model and the chip power model (placement.py). The container is CPU-only so
+energy is modeled, not measured (DESIGN.md §7); the paper's qualitative
+claim under test: the accelerated pipeline reduces J/tok, and the reduction
+grows with context until the fallback point.
+"""
+from benchmarks.common import row
+from repro.configs import get_arch
+from repro.core import placement
+
+
+def run():
+    rows = []
+    for arch in ("qwen3-32b", "llama3.2-1b"):
+        cfg = get_arch(arch)
+        for ctx in (65536, 1 << 20):
+            c = placement.sparse_attention_stage_costs(cfg, cfg.memory, ctx)
+            # accelerated: fused pipeline time x its (mostly memory-bound) power
+            t_pipe = sum(v.seconds() for k, v in c.items() if k != "rest")
+            t_rest = c["rest"].seconds()
+            e_fast = sum(v.seconds() * v.watts() for v in c.values())
+            # baseline: dense decode attention instead of the pipeline
+            dense = placement.dense_decode_cost(cfg, ctx)
+            e_base = (dense.seconds() * dense.watts()
+                      + t_rest * c["rest"].watts())
+            t_base = dense.seconds() + t_rest
+            rows.append(row(
+                f"table3_{arch}_ctx{ctx}", t_pipe + t_rest,
+                f"J/tok={e_fast * cfg.n_layers:.4f};baseJ={e_base * cfg.n_layers:.4f};"
+                f"improve={e_base / e_fast:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

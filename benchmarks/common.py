@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timing, CSV rows, small bench configs."""
+import sys
+import os
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, warmup=2, iters=5):
+    """Median wall time of fn(*args) in seconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def bench_cfg(n_layers=4, seq=1024):
+    """Small-but-representative CPU bench model."""
+    from repro.configs import get_arch
+    return get_arch("llama3.2-1b").replace(
+        name="bench-llama", n_layers=n_layers, d_model=256, n_heads=8,
+        n_kv_heads=4, head_dim=32, d_ff=1024, vocab_size=2048,
+        memory=get_arch("llama3.2-1b").memory.replace(
+            index_heads=8, index_dim=32, top_k=256, token_budget=256,
+            block_size=16, min_context=0),
+    )

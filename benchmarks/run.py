@@ -1,0 +1,39 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (stdout)."""
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_memory_fraction, bench_kernel_speedup,
+                        bench_e2e, bench_energy, bench_batch_scaling,
+                        bench_comm_bytes)
+
+BENCHES = [
+    ("memory_fraction (Fig 3/4/5)", bench_memory_fraction),
+    ("kernel_speedup (Fig 9/10r)", bench_kernel_speedup),
+    ("e2e_speedup (Fig 8/10l/11/12)", bench_e2e),
+    ("energy (Table 3)", bench_energy),
+    ("batch_scaling (Table 4)", bench_batch_scaling),
+    ("comm_bytes (App C.1/Fig 16)", bench_comm_bytes),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in BENCHES:
+        t0 = time.time()
+        try:
+            for r in mod.run():
+                print(r, flush=True)
+            print(f"# {label}: done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# {label}: FAILED\n# " +
+                  traceback.format_exc().replace("\n", "\n# "), flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro — TPU-native reproduction of "Understand and Accelerate Memory
+Processing Pipeline for Large Language Model Inference" (He et al., 2026).
+
+See DESIGN.md for the system inventory and hardware-adaptation notes.
+"""
+
+__version__ = "1.0.0"

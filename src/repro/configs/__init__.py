@@ -1,0 +1,51 @@
+"""Architecture registry: ``get_arch(name)`` / ``ARCHS``."""
+from repro.configs.base import (
+    ArchConfig,
+    MemoryConfig,
+    ShapeConfig,
+    SHAPES,
+    smoke_shape,
+)
+from repro.configs.qwen3_32b import CONFIG as _qwen3_32b
+from repro.configs.llama3_2_1b import CONFIG as _llama3_2_1b
+from repro.configs.glm4_9b import CONFIG as _glm4_9b
+from repro.configs.qwen2_7b import CONFIG as _qwen2_7b
+from repro.configs.granite_moe_1b_a400m import CONFIG as _granite
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.musicgen_medium import CONFIG as _musicgen
+from repro.configs.zamba2_7b import CONFIG as _zamba2
+from repro.configs.qwen2_vl_72b import CONFIG as _qwen2_vl
+from repro.configs.xlstm_125m import CONFIG as _xlstm
+
+ARCHS = {
+    c.name: c
+    for c in [
+        _qwen3_32b,
+        _llama3_2_1b,
+        _glm4_9b,
+        _qwen2_7b,
+        _granite,
+        _mixtral,
+        _musicgen,
+        _zamba2,
+        _qwen2_vl,
+        _xlstm,
+    ]
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = [
+    "ArchConfig",
+    "MemoryConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCHS",
+    "get_arch",
+    "smoke_shape",
+]

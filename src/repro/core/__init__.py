@@ -1,0 +1,5 @@
+"""The paper's primary contribution: the four-stage memory-processing
+pipeline (pipeline.py), its placement/heterogeneity policy (placement.py),
+and the concrete methods of Table 1 (methods/)."""
+from repro.core.pipeline import MemoryPipeline, StageProfiler, STAGES
+from repro.core import placement

@@ -1,0 +1,17 @@
+"""Memory-processing methods (paper Table 1). ``get_method(name)`` returns
+(init_fn, make_sparse_fn) for the sparse-attention family; RAG / MemAgent /
+MaC / TTT expose their own application-level APIs.
+"""
+from repro.core.methods import dsa, seer, lserve, rag, memagent, mac, ttt
+
+SPARSE_METHODS = {
+    "dsa": (dsa.dsa_init, dsa.make_sparse_fn),
+    "seer": (seer.seer_init, seer.make_sparse_fn),
+    "lserve": (lserve.lserve_init, lserve.make_sparse_fn),
+}
+
+
+def get_sparse_method(name: str):
+    if name not in SPARSE_METHODS:
+        raise KeyError(f"unknown sparse method {name!r}: {sorted(SPARSE_METHODS)}")
+    return SPARSE_METHODS[name]

@@ -1,0 +1,126 @@
+"""Memory-as-Context (Titans / HMT) — paper Table 1 row 8.
+
+  prepare   — forward pass producing a latent memory embedding per segment
+              (Titans-style linear projection of segment representations)
+  relevancy — linear projection of the current segment to a query + inner
+              product with the memory bank
+  retrieve  — top-k memory embeddings / softmax-weighted sum
+  apply     — prepend retrieved embeddings to the segment (cross-attention
+              context)
+
+Paper Fig. 6c data placement: the memory bank lives with the retrieval
+engine; only retrieved embeddings move. Here the bank is sharded with the
+retrieval shard_map and only [B, r, d] embeddings cross the mesh.
+
+This module is trainable — examples/train_mac_100m.py trains a ~100M-param
+backbone with it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MemoryConfig
+from repro.core.pipeline import MemoryPipeline
+from repro.models import layers as L
+
+Params = Dict
+
+
+@dataclasses.dataclass
+class MacConfig:
+    segment_len: int = 1024   # paper Appendix D
+    memory_slots: int = 64    # bank capacity (FIFO)
+    retrieve_k: int = 8
+    mode: str = "topk"        # topk | weighted (Titans weighted-sum variant)
+
+
+def mac_init(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_query": L.dense_init(k1, d, d, jnp.float32),
+        "w_mem": L.dense_init(k2, d, d, jnp.float32),
+    }
+
+
+def bank_init(cfg: ArchConfig, mc: MacConfig, batch: int):
+    return {
+        "bank": jnp.zeros((batch, mc.memory_slots, cfg.d_model), jnp.float32),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def prepare_memory(mp: Params, segment_hidden: jnp.ndarray) -> jnp.ndarray:
+    """Segment hidden states [B, S, d] -> memory embedding [B, d]."""
+    return segment_hidden.astype(jnp.float32).mean(axis=1) @ mp["w_mem"]
+
+
+def compute_relevancy(mp: Params, segment_embeds: jnp.ndarray,
+                      bank: jnp.ndarray) -> jnp.ndarray:
+    """query-gen (fusable linear proj, paper §4) + inner product -> [B, M]."""
+    q = segment_embeds.astype(jnp.float32).mean(axis=1) @ mp["w_query"]
+    return jnp.einsum("bd,bmd->bm", q, bank)
+
+
+def retrieve(bank: jnp.ndarray, scores: jnp.ndarray, count: jnp.ndarray,
+             mc: MacConfig) -> jnp.ndarray:
+    """-> retrieved embeddings [B, r, d] (only these cross devices)."""
+    M = bank.shape[1]
+    live = jnp.arange(M)[None] < count
+    masked = jnp.where(live, scores, -1e30)
+    if mc.mode == "weighted":
+        w = jax.nn.softmax(masked, axis=-1)
+        out = jnp.einsum("bm,bmd->bd", w, bank)[:, None]
+        return jnp.broadcast_to(out, (bank.shape[0], mc.retrieve_k,
+                                      bank.shape[2]))
+    _, idx = jax.lax.top_k(masked, mc.retrieve_k)
+    return jnp.take_along_axis(bank, idx[..., None], axis=1)
+
+
+def push(bank_state: Dict, new_mem: jnp.ndarray) -> Dict:
+    """FIFO append of the new segment memory."""
+    bank = jnp.roll(bank_state["bank"], -1, axis=1).at[:, -1].set(new_mem)
+    return {"bank": bank,
+            "count": jnp.minimum(bank_state["count"] + 1,
+                                 bank_state["bank"].shape[1])}
+
+
+def segment_step(mp: Params, bank_state: Dict, segment_embeds: jnp.ndarray,
+                 mc: MacConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Full pipeline for one segment.
+
+    segment_embeds [B, S, d] (token embeddings) -> (context [B, r+S, d],
+    updated bank). The caller runs the backbone on `context` and then calls
+    ``prepare_memory`` + ``push`` with the resulting hidden states.
+    """
+    scores = compute_relevancy(mp, segment_embeds, bank_state["bank"])
+    got = retrieve(bank_state["bank"], scores, bank_state["count"], mc)
+    context = jnp.concatenate([got.astype(segment_embeds.dtype),
+                               segment_embeds], axis=1)
+    return context, bank_state
+
+
+def build_pipeline(mp: Params, mc: MacConfig) -> MemoryPipeline:
+    def prepare(M):
+        hidden, bank_state = M
+        return prepare_memory(mp, hidden)
+
+    def relevancy(I, seg):
+        return ("q", I, seg)
+
+    def retrieve_stage(M, S):
+        _, mem_emb, seg = S
+        hidden, bank_state = M
+        scores = compute_relevancy(mp, seg, bank_state["bank"])
+        return retrieve(bank_state["bank"], scores, bank_state["count"], mc)
+
+    def apply(got, seg):
+        return jnp.concatenate([got.astype(seg.dtype), seg], axis=1)
+
+    return MemoryPipeline(name="mac", prepare=prepare, relevancy=relevancy,
+                          retrieve=retrieve_stage, apply=apply)

@@ -1,0 +1,93 @@
+"""MemAgent (synthesized memory) — paper Table 1 row 7.
+
+  prepare   — MODEL DECODING: generate a textual memory of ``mem_len`` tokens
+              conditioned on (previous memory, current segment)
+  relevancy — N/A (bypassed; always uses the preceding segment's memory)
+  retrieve  — nearest (previous) memory — a copy, no math
+  apply     — MODEL PREFILLING: consume [memory; next segment]
+
+Prefill/decode disaggregation (paper Fig. 6b): ``prefill_fn`` and
+``decode_fn`` are injected so the serving engine can place them on different
+mesh roles (the paper's GPU-prefill / FPGA-decode split becomes a
+prefill-submesh / decode-submesh split, DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MemoryConfig
+from repro.core.pipeline import MemoryPipeline
+
+
+@dataclasses.dataclass
+class MemAgentConfig:
+    segment_len: int = 5000   # paper Appendix D
+    mem_len: int = 1024
+    max_answer: int = 32
+
+
+def run_memagent(
+    params,
+    cfg: ArchConfig,
+    doc_tokens: jnp.ndarray,   # [B, n_seg * segment_len]
+    question: jnp.ndarray,     # [B, q_len]
+    ma: MemAgentConfig,
+    *,
+    prefill_fn: Callable,      # (params, tokens, max_len) -> (logits, caches)
+    decode_fn: Callable,       # (params, token, caches) -> (logits, caches)
+    profiler=None,
+):
+    """Segment loop -> answer tokens [B, max_answer]."""
+    import time as _t
+    B, total = doc_tokens.shape
+    n_seg = total // ma.segment_len
+    memory = jnp.zeros((B, ma.mem_len), jnp.int32)  # empty textual memory
+
+    def synthesize(memory, segment):
+        """prepare-memory: decode mem_len tokens from [memory; segment]."""
+        ctx = jnp.concatenate([memory, segment], axis=1)
+        logits, caches = prefill_fn(params, ctx,
+                                    ctx.shape[1] + ma.mem_len)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = []
+        for _ in range(ma.mem_len):
+            out.append(tok)
+            logits, caches = decode_fn(params, tok, caches)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return jnp.stack(out, axis=1)  # [B, mem_len]
+
+    for s in range(n_seg):
+        seg = jax.lax.dynamic_slice_in_dim(doc_tokens, s * ma.segment_len,
+                                           ma.segment_len, axis=1)
+        t0 = _t.perf_counter()
+        memory = jax.block_until_ready(synthesize(memory, seg))
+        if profiler:  # decoding-to-memory == prepare (paper App. B)
+            profiler.record("memagent", ("prepare",), _t.perf_counter() - t0)
+
+    # answer: prefill [memory; question], decode up to max_answer
+    ctx = jnp.concatenate([memory, question], axis=1)
+    t0 = _t.perf_counter()
+    logits, caches = prefill_fn(params, ctx, ctx.shape[1] + ma.max_answer)
+    if profiler:
+        profiler.record("memagent", ("apply",), _t.perf_counter() - t0)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    answer = [tok]
+    for _ in range(ma.max_answer - 1):
+        logits, caches = decode_fn(params, tok, caches)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        answer.append(tok)
+    return jnp.stack(answer, axis=1)
+
+
+def build_pipeline(synthesize_fn, prefill_fn) -> MemoryPipeline:
+    return MemoryPipeline(
+        name="memagent",
+        prepare=lambda M: synthesize_fn(M),   # model decoding
+        relevancy=None,                        # bypassed (paper §3.1)
+        retrieve=lambda M, S: S,               # nearest = previous memory
+        apply=lambda Mp, x: prefill_fn(Mp, x),
+    )

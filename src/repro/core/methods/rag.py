@@ -1,0 +1,153 @@
+"""RAG — paper Table 1 rows 4-6 (two-stage, fixed-sentence, dynamic).
+
+  prepare   — corpus indexing: term-frequency stats + doc embeddings
+              (one-time, amortized — paper §3.1)
+  relevancy — BM25 (single-stage) or hybrid BM25+embedding then a
+              cross-encoder reranker (two-stage)
+  retrieve  — top-k documents
+  apply     — append retrieved documents to the query (no FLOPs; paper
+              Table 2 marks this stage "no calculations")
+
+Dynamic-RAG trigger policies (DRAGIN-style attention-uncertainty, FLARE-style
+confidence) are implemented over the generator's decode logits.
+
+TPU adaptation: BM25's per-term histogram walk is re-blocked — the query's
+term columns are gathered once into a dense [D, T] panel (host/XLA gather),
+then the fused Pallas kernel streams score+top-k (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MemoryConfig
+from repro.core.pipeline import MemoryPipeline
+from repro.kernels import ops, ref as kref
+
+
+@dataclasses.dataclass
+class Corpus:
+    """Dense retrieval-side corpus statistics (synthetic Zipf, data/)."""
+
+    tf: jnp.ndarray        # [D, Vr] term frequencies (int32)
+    doc_len: jnp.ndarray   # [D]
+    idf: jnp.ndarray       # [Vr]
+    doc_tokens: jnp.ndarray  # [D, doc_max] generator-vocab token ids
+    doc_embeds: Optional[jnp.ndarray] = None  # [D, de] (two-stage)
+
+    @property
+    def n_docs(self) -> int:
+        return self.tf.shape[0]
+
+    @property
+    def avgdl(self) -> float:
+        return float(jnp.mean(self.doc_len))
+
+
+def gather_term_panel(corpus: Corpus, query_terms: jnp.ndarray):
+    """query_terms [B, T] -> (tf_panel [B, D, T], idf [B, T]).
+
+    The one irregular gather, hoisted out of the kernel."""
+    tfq = jnp.take(corpus.tf, query_terms, axis=1)      # [D, B, T]
+    tfq = jnp.moveaxis(tfq, 1, 0).astype(jnp.float32)   # [B, D, T]
+    idf = jnp.take(corpus.idf, query_terms, axis=0)     # [B, T]
+    return tfq, idf
+
+
+def bm25_retrieve(corpus: Corpus, query_terms: jnp.ndarray, k: int,
+                  *, fused: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (scores [B,k], doc_ids [B,k])."""
+    tfq, idf = gather_term_panel(corpus, query_terms)
+    B, D, T = tfq.shape
+    dl = jnp.broadcast_to(corpus.doc_len[None].astype(jnp.float32), (B, D))
+    if fused:
+        return ops.bm25_topk(tfq, dl, idf, k, block=min(4096, D),
+                             avgdl=corpus.avgdl)
+    return kref.bm25_topk(tfq, dl, idf, k, avgdl=corpus.avgdl)
+
+
+def hybrid_retrieve(corpus: Corpus, query_terms: jnp.ndarray,
+                    query_embed: jnp.ndarray, n_first: int,
+                    alpha: float = 0.5):
+    """Two-stage first pass: BM25 + dense-embedding hybrid -> top-N."""
+    tfq, idf = gather_term_panel(corpus, query_terms)
+    B, D, _ = tfq.shape
+    dl = jnp.broadcast_to(corpus.doc_len[None].astype(jnp.float32), (B, D))
+    lex = kref.bm25_scores(tfq, dl, idf, avgdl=corpus.avgdl)
+    sem = query_embed @ corpus.doc_embeds.T             # [B, D]
+    z = lambda s: (s - s.mean(-1, keepdims=True)) / (s.std(-1, keepdims=True) + 1e-6)
+    return jax.lax.top_k(alpha * z(lex) + (1 - alpha) * z(sem), n_first)
+
+
+def rerank(score_fn, corpus: Corpus, query_tokens: jnp.ndarray,
+           cand_ids: jnp.ndarray, k: int):
+    """Cross-encoder second stage. score_fn(query_tokens, doc_tokens)->[B,N]."""
+    docs = jnp.take(corpus.doc_tokens, cand_ids, axis=0)  # [B, N, doc_max]
+    scores = score_fn(query_tokens, docs)
+    top, pos = jax.lax.top_k(scores, k)
+    return top, jnp.take_along_axis(cand_ids, pos, axis=1)
+
+
+def append_to_query(corpus: Corpus, query_tokens: jnp.ndarray,
+                    doc_ids: jnp.ndarray, max_len: int):
+    """Apply-to-inference: concat retrieved docs before the query (no math)."""
+    B, k = doc_ids.shape
+    docs = jnp.take(corpus.doc_tokens, doc_ids, axis=0).reshape(B, -1)
+    out = jnp.concatenate([docs, query_tokens], axis=1)
+    return out[:, -max_len:] if out.shape[1] > max_len else out
+
+
+# --- dynamic-RAG trigger policies over generator logits --------------------
+
+
+def flare_trigger(logits: jnp.ndarray, tau: float = 0.4) -> jnp.ndarray:
+    """FLARE: retrieve when token confidence drops below tau. [B,V]->[B]."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return p.max(axis=-1) < tau
+
+
+def dragin_trigger(logits: jnp.ndarray, attn_entropy: jnp.ndarray,
+                   tau: float = 2.0) -> jnp.ndarray:
+    """DRAGIN: information-need = token entropy weighted by attention
+    statistics of the pending token."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    ent = -(p * jnp.log(p + 1e-9)).sum(-1)
+    return ent * jnp.maximum(attn_entropy, 1e-3) > tau
+
+
+def build_pipeline(corpus: Corpus, k: int, *, fused: bool = False,
+                   max_len: int = 4096) -> MemoryPipeline:
+    """4-stage descriptor over (memory=corpus stats, query=term ids)."""
+
+    def prepare(M):
+        return M  # corpus indexing is one-time/amortized; identity at runtime
+
+    def relevancy(I, q):
+        tfq, idf = gather_term_panel(corpus, q)
+        B, D, _ = tfq.shape
+        dl = jnp.broadcast_to(corpus.doc_len[None].astype(jnp.float32), (B, D))
+        if fused:
+            _, ids = ops.bm25_topk(tfq, dl, idf, k, block=min(4096, D),
+                                   avgdl=corpus.avgdl)
+            return ("fused", ids)
+        return ("scores", kref.bm25_scores(tfq, dl, idf, avgdl=corpus.avgdl))
+
+    def retrieve(M, S):
+        tag, val = S
+        if tag == "fused":
+            return val
+        _, ids = jax.lax.top_k(val, k)
+        return ids
+
+    def apply(doc_ids, q):
+        return jnp.take(corpus.doc_tokens, doc_ids, axis=0)
+
+    return MemoryPipeline(
+        name="rag-fused" if fused else "rag",
+        prepare=prepare, relevancy=relevancy, retrieve=retrieve, apply=apply,
+        fused={"relevancy": ("relevancy", "retrieve")} if fused else {},
+    )

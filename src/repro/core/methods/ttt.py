@@ -1,0 +1,93 @@
+"""Test-time training (TTT / LaCT) — paper Table 1 row 9.
+
+  prepare   — backward pass (fast-weight gradient step over a chunk)
+  relevancy — compute reconstruction loss
+  retrieve  — N/A (parameterized memory, bypassed)
+  apply     — forward pass through the updated fast weights
+
+Paper §4: "the heterogeneity is insufficient ... we do NOT deploy it on the
+heterogeneous system". We mirror that: this layer always runs the dense path
+(no kernels, no offload) — implemented so the profiler can still measure its
+stage breakdown for Fig. 5 / Table 2.
+
+LaCT-style batched (chunked) update: W <- W - lr * phi(K)^T (phi(K) W - V).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.pipeline import MemoryPipeline
+from repro.models import layers as L
+
+Params = Dict
+
+
+def ttt_init(key, cfg: ArchConfig, fast_dim: int = 0) -> Params:
+    d = cfg.d_model
+    f = fast_dim or d
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], d, f, jnp.float32),
+        "wk": L.dense_init(ks[1], d, f, jnp.float32),
+        "wv": L.dense_init(ks[2], d, f, jnp.float32),
+        "out": L.dense_init(ks[3], f, d, jnp.float32),
+        "lr": jnp.asarray(0.1, jnp.float32),
+    }
+
+
+def fast_state_init(cfg: ArchConfig, batch: int, fast_dim: int = 0):
+    f = fast_dim or cfg.d_model
+    return jnp.zeros((batch, f, f), jnp.float32)
+
+
+def ttt_forward(p: Params, x: jnp.ndarray, state: jnp.ndarray,
+                chunk: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, d]; state W [B, f, f] -> (y [B, S, d], W')."""
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    xf = x.astype(jnp.float32)
+    q = jax.nn.silu(xf @ p["wq"]).reshape(B, nc, chunk, -1)
+    k = jax.nn.silu(xf @ p["wk"]).reshape(B, nc, chunk, -1)
+    v = (xf @ p["wv"]).reshape(B, nc, chunk, -1)
+
+    def step(W, inp):
+        qc, kc, vc = inp  # [B, chunk, f]
+        # relevancy: reconstruction residual (loss gradient)
+        resid = jnp.einsum("bcf,bfg->bcg", kc, W) - vc
+        # prepare: batched gradient step on the fast weights (LaCT)
+        W = W - p["lr"] / chunk * jnp.einsum("bcf,bcg->bfg", kc, resid)
+        # apply: forward through updated weights
+        y = jnp.einsum("bcf,bfg->bcg", qc, W)
+        return W, y
+
+    tos = lambda a: jnp.moveaxis(a, 1, 0)
+    state, ys = jax.lax.scan(step, state, (tos(q), tos(k), tos(v)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, -1)
+    return (y @ p["out"]).astype(x.dtype), state
+
+
+def build_pipeline(p: Params, chunk: int = 256) -> MemoryPipeline:
+    def prepare(M):
+        W, kc, vc = M
+        resid = jnp.einsum("bcf,bfg->bcg", kc, W) - vc
+        return W - p["lr"] / kc.shape[1] * jnp.einsum("bcf,bcg->bfg", kc, resid)
+
+    def relevancy(W, x):
+        kc, vc = x
+        resid = jnp.einsum("bcf,bfg->bcg", kc, W) - vc
+        return 0.5 * jnp.mean(resid * resid)
+
+    def apply(Mp, x):
+        W = Mp if isinstance(Mp, jnp.ndarray) else Mp[0]
+        qc = x[0] if isinstance(x, tuple) else x
+        return jnp.einsum("bcf,bfg->bcg", qc, W)
+
+    return MemoryPipeline(name="ttt", prepare=prepare, relevancy=relevancy,
+                          retrieve=None, apply=apply)

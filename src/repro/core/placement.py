@@ -1,0 +1,123 @@
+"""Placement policy: the heterogeneity analysis (paper §4, Table 2) and the
+dynamic engine-selection rule (paper §5.2 / Appendix F "dynamically falls
+back to GPU-only execution").
+
+On TPU, "which engine" becomes "which execution path": fused sparse pipeline
+(Pallas kernels, index-only exchange) vs dense fallback attention. The
+decision is a static-shape-friendly roofline estimate evaluated at trace time
+from the *maximum* context of the shape cell, plus a traced runtime predicate
+for serving (lax.cond on cached length).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ArchConfig, MemoryConfig
+
+# Hardware constants (TPU v5e target; see EXPERIMENTS.md §Roofline)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+VMEM_BYTES = 64 * 2**20  # ~64 MiB VMEM per chip (v5e ~128MB/2 cores)
+
+# Chip power model for the derived-energy benchmark (Table 3 analogue).
+# TPU v5e ~200W peak board power; memory-bound phases draw less.
+POWER_COMPUTE_W = 200.0
+POWER_MEMBOUND_W = 120.0
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    flops: float
+    bytes: float
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.bytes, 1.0)
+
+    def seconds(self) -> float:
+        return max(self.flops / PEAK_FLOPS, self.bytes / HBM_BW)
+
+    def watts(self) -> float:
+        return (POWER_COMPUTE_W if self.flops / PEAK_FLOPS >
+                self.bytes / HBM_BW else POWER_MEMBOUND_W)
+
+
+def sparse_attention_stage_costs(cfg: ArchConfig, mem: MemoryConfig,
+                                 context: int, batch: int = 1
+                                 ) -> Dict[str, StageCost]:
+    """Analytic per-stage cost of the sparse-attention pipeline (one layer,
+    one decode step). Mirrors the paper's Table 2 / Appendix B accounting."""
+    hd, kv = cfg.hd, cfg.n_kv_heads
+    hi, di = mem.index_heads, mem.index_dim
+    k = mem.top_k
+    B = batch
+    prepare = StageCost(  # index projection for the new token
+        flops=2 * B * cfg.d_model * (hi * di + di),
+        bytes=2 * B * (cfg.d_model * (hi * di + di)),
+    )
+    relevancy = StageCost(  # q_idx . k_idx over the full context
+        flops=2 * B * hi * di * context,
+        bytes=B * context * di * 2,  # stream compressed keys once (bf16)
+    )
+    retrieve = StageCost(  # top-k compare network over scores
+        flops=B * context * 1.0,     # ~one compare-exchange per element
+        bytes=B * context * 8,       # score + index streams
+    )
+    apply = StageCost(  # attention over k selected tokens
+        flops=2 * B * cfg.n_heads * hd * k * 2,
+        bytes=B * k * kv * hd * 2 * 2,
+    )
+    rest = StageCost(  # dense transformer step (projections + FFN)
+        flops=2 * B * cfg.n_active_params() / cfg.n_layers,
+        bytes=2 * cfg.n_active_params() / cfg.n_layers,
+    )
+    return {"prepare": prepare, "relevancy": relevancy, "retrieve": retrieve,
+            "apply": apply, "rest": rest}
+
+
+def dense_decode_cost(cfg: ArchConfig, context: int, batch: int = 1) -> StageCost:
+    hd, kv = cfg.hd, cfg.n_kv_heads
+    return StageCost(
+        flops=2 * batch * cfg.n_heads * hd * context * 2,
+        bytes=batch * context * kv * hd * 2 * 2,
+    )
+
+
+def choose_path(cfg: ArchConfig, mem: MemoryConfig, context: int,
+                batch: int = 1) -> str:
+    """'dense' | 'sparse' — the paper's dynamic fallback, roofline-driven.
+
+    Below min_context the pipeline overhead dominates (paper Fig. 3: 1-11% at
+    4K); above fallback_context the compressed index itself spills (paper:
+    >1M tokens the FPGA loses to the GPU) — both fall back to dense.
+    """
+    if mem.method in ("none", "ttt"):
+        return "dense"
+    if context < mem.min_context:
+        return "dense"
+    if context > mem.fallback_context:
+        return "dense"
+    costs = sparse_attention_stage_costs(cfg, mem, context, batch)
+    sparse_s = sum(c.seconds() for c in costs.values()) - costs["rest"].seconds()
+    dense_s = dense_decode_cost(cfg, context, batch).seconds()
+    return "sparse" if sparse_s < dense_s else "dense"
+
+
+# Paper Table 2 (orders of magnitude of arithmetic intensity), used by
+# benchmarks to validate our measured intensities land in the right decade.
+PAPER_TABLE2 = {
+    "sparse_attention": {"prepare": (10, 100), "relevancy": (1, 10),
+                         "retrieve": (0.1, 1), "apply": (10, 100),
+                         "rest": (1, 10)},
+    "rag": {"prepare": (1, 100), "relevancy": (1, 10), "retrieve": (0.1, 1),
+            "apply": (0, 0), "rest": (100, 1e9)},
+    "synthesized_memory": {"prepare": (1, 10), "apply": (100, 1e9),
+                           "rest": (100, 1e9)},
+    "memory_as_context": {"prepare": (100, 1e9), "relevancy": (1, 10),
+                          "retrieve": (0.1, 1), "apply": (0, 0),
+                          "rest": (100, 1e9)},
+    "ttt": {"prepare": (100, 1e9), "relevancy": (1, 10),
+            "apply": (100, 1e9), "rest": (100, 1e9)},
+}

@@ -1,0 +1,1 @@
+from repro.data.pipeline import TokenStream, build_corpus, sample_queries, pack_documents

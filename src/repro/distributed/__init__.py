@@ -1,0 +1,8 @@
+from repro.distributed import (
+    sharding,
+    topk,
+    collectives,
+    checkpoint,
+    elastic,
+    pipeline_parallel,
+)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the memory-processing hot spots the paper offloads:
+fused relevancy+top-k (FPGA General Setup engine), paged sparse decode
+attention, flash attention, page min/max pooling (LServe prepare), and fused
+BM25+top-k (RAG). Public API in ``ops``; oracles in ``ref``.
+"""
+from repro.kernels import ops, ref  # noqa: F401

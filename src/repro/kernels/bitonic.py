@@ -1,0 +1,73 @@
+"""Bitonic sort primitive usable INSIDE Pallas TPU kernels.
+
+Mosaic has no ``lax.sort``/``lax.top_k`` lowering, so the fused
+relevancy+retrieval kernels sort with a bitonic compare-exchange network
+built purely from reshapes + ``jnp.where`` (the partner element ``x[i ^ j]``
+for power-of-two ``j`` is a swap of one reshaped axis — no gathers).
+
+Ties are broken lexicographically on the integer payload (ascending index),
+which makes the network a strict total order — exchanges stay consistent and
+no payload is ever duplicated or dropped.
+
+This mirrors the paper's FPGA "parallel reduction tree" top-k retriever
+(Fig. 7b): same O(n log^2 n) compare network, vectorized over VPU lanes
+instead of unrolled into LUTs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _partner_swap(x: jnp.ndarray, j: int) -> jnp.ndarray:
+    """Return y with y[..., i] = x[..., i ^ j] (j a power of two)."""
+    n = x.shape[-1]
+    lead = x.shape[:-1]
+    y = x.reshape(lead + (n // (2 * j), 2, j))
+    y = jnp.flip(y, axis=-2)
+    return y.reshape(lead + (n,))
+
+
+def _bit_pattern(n: int, bit: int) -> jnp.ndarray:
+    """Boolean [n]: True where (i & bit) == 0.
+
+    Built from lax.iota (not a numpy constant) so the expression is legal
+    inside a pallas_call kernel body — Pallas rejects captured constants.
+    """
+    i = jax.lax.iota(jnp.int32, n)
+    return (i & bit) == 0
+
+
+def bitonic_sort_desc(keys: jnp.ndarray, vals: jnp.ndarray):
+    """Sort descending along the last axis. keys fp, vals int payload.
+
+    Shapes [..., n] with n a power of two. Returns (keys_sorted, vals_sorted).
+    """
+    n = keys.shape[-1]
+    assert n & (n - 1) == 0, f"bitonic sort needs power-of-two n, got {n}"
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            pk = _partner_swap(keys, j)
+            pv = _partner_swap(vals, j)
+            # runs with (i & k) == 0 sort DESCENDING (for i < n=k this covers
+            # the whole array, giving a descending final merge)
+            desc = _bit_pattern(n, k)
+            is_lower = _bit_pattern(n, j)
+            # descending run: lower index of the pair takes the max
+            take_max = ~jnp.logical_xor(desc, is_lower)
+            # strict self-wins predicate (lexicographic on (key, -val))
+            self_gt = (keys > pk) | ((keys == pk) & (vals < pv))
+            sel_self = jnp.where(take_max, self_gt, ~self_gt)
+            keys = jnp.where(sel_self, keys, pk)
+            vals = jnp.where(sel_self, vals, pv)
+            j //= 2
+        k *= 2
+    return keys, vals
+
+
+def bitonic_topk(keys: jnp.ndarray, vals: jnp.ndarray, k: int):
+    """Top-k by full descending sort + slice (exact when k <= n)."""
+    ks, vs = bitonic_sort_desc(keys, vals)
+    return ks[..., :k], vs[..., :k]

@@ -1,0 +1,78 @@
+"""Fused BM25 scoring + top-k over gathered term columns (RAG relevancy +
+retrieval, paper Fig. 10 right / Table 1 "BM25 + Top-k").
+
+TPU adaptation (DESIGN.md §2): BM25's irregular per-term histogram lookups are
+hoisted OUT of the kernel — the data pipeline gathers the query's term-
+frequency columns once into a dense [D, T] panel — while the streaming
+score + top-k stays fused in VMEM, mirroring the FPGA dataflow engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitonic import bitonic_topk
+
+
+def _kernel(tf_ref, dl_ref, idf_ref, vals_ref, idx_ref,
+            *, k1: float, b: float, avgdl: float, bd: int, c: int, n_docs: int):
+    j = pl.program_id(1)
+    tf = tf_ref[0].astype(jnp.float32)        # [bd, T]
+    dl = dl_ref[0].astype(jnp.float32)        # [bd]
+    idf = idf_ref[0].astype(jnp.float32)      # [T]
+    denom = tf + k1 * (1.0 - b + b * dl[:, None] / avgdl)
+    scores = (tf * (k1 + 1.0) / denom) @ idf  # [bd]
+    idx = j * bd + jax.lax.iota(jnp.int32, bd)
+    scores = jnp.where(idx < n_docs, scores, -jnp.inf)
+    top_v, top_pos = bitonic_topk(scores[None, :],
+                                  jax.lax.iota(jnp.int32, bd)[None, :], c)
+    vals_ref[0, 0] = top_v[0]
+    idx_ref[0, 0] = j * bd + top_pos[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "c", "k1", "b", "avgdl", "valid", "interpret"),
+)
+def bm25_topk_candidates(
+    tf: jnp.ndarray,       # [B, D, T] term frequencies (query's terms only)
+    doc_len: jnp.ndarray,  # [B, D]
+    idf: jnp.ndarray,      # [B, T]
+    *,
+    block: int = 4096,
+    c: int = 64,
+    k1: float = 1.5,
+    b: float = 0.75,
+    avgdl: float = 100.0,
+    valid: int = 0,        # 0 -> D; real doc count when padded
+    interpret: bool = True,
+):
+    """Per-block BM25 top-c candidates: (vals [B,nb,c], idx [B,nb,c])."""
+    B, D, T = tf.shape
+    block = min(block, D)
+    assert D % block == 0
+    nb = D // block
+    c = min(c, block)
+    kern = functools.partial(_kernel, k1=k1, b=b, avgdl=avgdl, bd=block, c=c,
+                             n_docs=valid or D)
+    return pl.pallas_call(
+        kern,
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((1, block, T), lambda bi, j: (bi, j, 0)),
+            pl.BlockSpec((1, block), lambda bi, j: (bi, j)),
+            pl.BlockSpec((1, T), lambda bi, j: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c), lambda bi, j: (bi, j, 0)),
+            pl.BlockSpec((1, 1, c), lambda bi, j: (bi, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nb, c), jnp.float32),
+            jax.ShapeDtypeStruct((B, nb, c), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tf, doc_len, idf)

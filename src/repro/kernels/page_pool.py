@@ -1,0 +1,44 @@
+"""LServe page-wise min/max pooling — the Prepare-Memory stage.
+
+Each logical page of the key cache is summarized by its channel-wise min and
+max vectors; the relevancy stage then bounds q.k over the page by
+max(q*min, q*max) per channel. One grid step per (batch, page).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(k_ref, min_ref, max_ref):
+    blk = k_ref[0, 0].astype(jnp.float32)  # [ps, KV, dh]
+    min_ref[0, 0] = blk.min(axis=0)
+    max_ref[0, 0] = blk.max(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("page_size", "interpret"))
+def page_minmax(k_cache: jnp.ndarray, *, page_size: int = 64,
+                interpret: bool = True):
+    """[B, S, KV, dh] -> (min, max) [B, S/ps, KV, dh] fp32."""
+    B, S, KV, dh = k_cache.shape
+    ps = page_size
+    assert S % ps == 0
+    n_pages = S // ps
+    kp = k_cache.reshape(B, n_pages, ps, KV, dh)
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, n_pages),
+        in_specs=[pl.BlockSpec((1, 1, ps, KV, dh), lambda b, p: (b, p, 0, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1, KV, dh), lambda b, p: (b, p, 0, 0)),
+            pl.BlockSpec((1, 1, KV, dh), lambda b, p: (b, p, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n_pages, KV, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_pages, KV, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kp)

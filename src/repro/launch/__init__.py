@@ -1,0 +1,3 @@
+# Launch layer: mesh construction, dry-run, roofline extraction, CLI drivers.
+# NOTE: do NOT import dryrun here — it sets XLA_FLAGS at import time and must
+# only be imported as the __main__ module of a dedicated process.

@@ -1,0 +1,250 @@
+"""Trip-count-aware HLO cost walker.
+
+``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE, which
+under-reports flops/bytes/collectives by the trip count (layers x accum x
+chunks for this codebase). This walker parses the optimized HLO text,
+recovers each while's trip count from the integer bound in its condition
+computation, and accumulates:
+
+  * dot FLOPs        — 2 * prod(result dims) * contraction size, from the
+                       lhs shape + lhs_contracting_dims attribute
+  * memory bytes     — sum of (operands + results) of top-level materialized
+                       ops (fusion internals excluded: fusions don't
+                       materialize intermediates, matching XLA's execution)
+  * collective bytes — result sizes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+
+scaled by the product of enclosing trip counts; conditionals take the max
+over branches (one branch executes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|[a-z]+\d+)\[([0-9,]*)\]")
+# "%name = <result-spec> opcode(...)", result-spec may be a tuple
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                       r"([a-z][\w\-]*)\((.*)$")
+
+NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "reshape",  # usually free (layout-preserving at top level post-opt)
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _spec_bytes(spec: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(spec):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _dims(spec: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(spec)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_spec: str
+    op: str
+    rest: str  # operand list + attrs (may span to end of line)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]  # instr name -> result spec
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*)?\{\s*$", line)
+            if m and ("{" in line):
+                cur = Computation(m.group(1), [], {})
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.result_spec
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _attr_comp(rest: str, attr: str) -> Optional[str]:
+    m = re.search(attr + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _branch_comps(rest: str) -> List[str]:
+    m = re.search(r"branch_computations=\{([^}]*)\}", rest)
+    if not m:
+        return []
+    return [b.strip().lstrip("%") for b in m.group(1).split(",") if b.strip()]
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands are the leading %refs before the closing paren of the op call
+    head = rest.split(")")[0]
+    return re.findall(r"%([\w.\-]+)", head)
+
+
+def trip_count(cond: Computation) -> int:
+    """Max integer constant in the condition computation (loop bound)."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.op + "(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+        m = re.search(r"constant\((-?\d+)\)", ins.rest)
+        if m:
+            best = max(best, int(m.group(1)))
+    return max(best, 1)
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    ops = _operand_names(ins.rest)
+    if not ops:
+        return 0.0
+    lhs_spec = shapes.get(ops[0], "")
+    lhs_dims = _dims(lhs_spec)
+    res_dims = _dims(ins.result_spec) or []
+    m = re.search(r"lhs_contracting_dims=\{([^}]*)\}", ins.rest)
+    if lhs_dims is None or not m:
+        return 0.0
+    k = 1
+    for d in m.group(1).split(","):
+        if d.strip():
+            idx = int(d)
+            if idx < len(lhs_dims):
+                k *= lhs_dims[idx]
+    out = 1
+    for d in res_dims:
+        out *= d
+    return 2.0 * out * k
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    per_collective: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Costs", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        self.coll_bytes += other.coll_bytes * scale
+        for k, v in other.per_collective.items():
+            self.per_collective[k] += v * scale
+
+
+def _comp_costs(comp: Computation, comps: Dict[str, Computation],
+                memo: Dict[str, Costs]) -> Costs:
+    if comp.name in memo:
+        return memo[comp.name]
+    c = Costs()
+    memo[comp.name] = c  # pre-insert (cycles can't happen in HLO, but safe)
+    for ins in comp.instrs:
+        if ins.op == "while":
+            body = _attr_comp(ins.rest, "body")
+            cond = _attr_comp(ins.rest, "condition")
+            trips = trip_count(comps[cond]) if cond and cond in comps else 1
+            if body and body in comps:
+                c.add(_comp_costs(comps[body], comps, memo), trips)
+            continue
+        if ins.op == "conditional":
+            branches = _branch_comps(ins.rest)
+            branch_costs = [
+                _comp_costs(comps[b], comps, memo) for b in branches
+                if b in comps
+            ]
+            if branch_costs:
+                worst = max(branch_costs, key=lambda x: max(
+                    x.flops, x.bytes, x.coll_bytes))
+                c.add(worst)
+            continue
+        if ins.op == "fusion":
+            callee = _attr_comp(ins.rest, "calls")
+            if callee and callee in comps:
+                # dots inside the fusion still hit the MXU
+                inner = _comp_costs(comps[callee], comps, memo)
+                c.flops += inner.flops
+            # memory traffic: fusion boundary only (operands + result)
+            c.bytes += _spec_bytes(ins.result_spec)
+            for o in _operand_names(ins.rest):
+                c.bytes += _spec_bytes(comp.shapes.get(o, ""))
+            continue
+        if ins.op in ("dot", "convolution"):
+            c.flops += _dot_flops(ins, comp.shapes)
+            c.bytes += _spec_bytes(ins.result_spec)
+            for o in _operand_names(ins.rest):
+                c.bytes += _spec_bytes(comp.shapes.get(o, ""))
+            continue
+        if ins.op in COLLECTIVES or any(ins.op.startswith(k + "-start")
+                                        for k in COLLECTIVES):
+            base = ins.op.replace("-start", "")
+            b = _spec_bytes(ins.result_spec)
+            c.coll_bytes += b
+            if base in c.per_collective:
+                c.per_collective[base] += b
+            c.bytes += b  # collectives also touch HBM
+            continue
+        if ins.op in NO_TRAFFIC or ins.op.endswith("-done"):
+            continue
+        # other materialized ops (copy, gather, scatter, dynamic-slice, ...)
+        c.bytes += _spec_bytes(ins.result_spec)
+        for o in _operand_names(ins.rest):
+            c.bytes += _spec_bytes(comp.shapes.get(o, ""))
+    memo[comp.name] = c
+    return c
+
+
+def walk(hlo: str) -> Costs:
+    comps = parse_computations(hlo)
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        # fall back: the computation with most instructions
+        entry = max(comps, key=lambda k: len(comps[k].instrs))
+    # exclude condition computations / to_apply reducers from double count:
+    # they're only reached via while/fusion edges above, so walking entry
+    # alone is correct.
+    return _comp_costs(comps[entry], comps, {})

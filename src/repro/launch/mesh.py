@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+initialization.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes) -> Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def split_mesh_roles(mesh: Mesh, prefill_fraction: float = 0.5):
+    """Prefill/decode disaggregation (paper Fig. 6b): partition the data axis
+    into a prefill submesh and a decode submesh. Returns (prefill, decode)."""
+    devices = mesh.devices  # [..., data, model]
+    n_data = mesh.shape["data"]
+    cut = max(1, int(n_data * prefill_fraction))
+    axes = mesh.axis_names
+    d_idx = axes.index("data")
+    sl_pre = [slice(None)] * devices.ndim
+    sl_dec = [slice(None)] * devices.ndim
+    sl_pre[d_idx] = slice(0, cut)
+    sl_dec[d_idx] = slice(cut, n_data)
+    pre = Mesh(devices[tuple(sl_pre)], axes,
+               axis_types=(AxisType.Auto,) * len(axes))
+    dec = Mesh(devices[tuple(sl_dec)], axes,
+               axis_types=(AxisType.Auto,) * len(axes))
+    return pre, dec

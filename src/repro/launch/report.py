@@ -1,0 +1,111 @@
+"""Aggregate cached dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh 16x16] [--variant baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def load(mesh: str, variant: str):
+    from repro.configs import SHAPES, get_arch
+    from repro.launch import roofline as RL
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, f"*__{mesh}__{variant}.json"))):
+        r = json.load(open(f))
+        if r.get("ok"):
+            # recompute derived quantities (TPU-realistic bottleneck/MFU use
+            # the analytic ideal-memory LOWER bound; the walker's bytes are a
+            # fusion-boundary UPPER bound from the CPU-lowered module)
+            rl = r["roofline"]
+            cfg, shape = get_arch(r["arch"]), SHAPES[r["shape"]]
+            chips = rl["chips"]
+            rl["ideal_memory_s"] = (RL.ideal_memory_bytes(cfg, shape, chips)
+                                    / RL.HBM_BW)
+            terms = {"compute": rl["compute_s"],
+                     "memory": rl["ideal_memory_s"],
+                     "collective": rl["collective_s"]}
+            rl["bottleneck_tpu"] = max(terms, key=terms.get)
+            step = max(terms.values())
+            rl["step_s_tpu"] = step
+            rl["mfu_tpu"] = (rl["model_flops"] / (step * chips * RL.PEAK_FLOPS)
+                             if step else 0.0)
+        rows.append(r)
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def table(rows, show_memory_analysis=False):
+    hdr = ("| arch | shape | compute | memory lo..hi | collective | "
+           "bottleneck | useful | MFU | dominant collective |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                       f"{r.get('error', '?')[:60]} |" + " |" * 6)
+            continue
+        rl = r["roofline"]
+        per = rl.get("per_collective", {})
+        dom = max(per, key=per.get) if any(per.values()) else "-"
+        dom_s = f"{dom} {per.get(dom, 0)/2**30:.2f}GiB" if dom != "-" else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rl['compute_s'])} | "
+            f"{fmt_s(rl['ideal_memory_s'])}..{fmt_s(rl['memory_s'])} | "
+            f"{fmt_s(rl['collective_s'])} | {rl['bottleneck_tpu']} | "
+            f"{rl['useful_ratio']:.2f} | {rl['mfu_tpu']:.3f} | {dom_s} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb(rows):
+    """The three §Perf cells: worst MFU train cell, most collective-bound,
+    most paper-representative (long-context sparse decode)."""
+    ok = [r for r in rows if r.get("ok")]
+    train = [r for r in ok if r["shape"] == "train_4k"]
+    worst = min(train, key=lambda r: r["roofline"]["mfu_tpu"])
+    ratio = lambda r: (r["roofline"]["collective_s"]
+                       / max(r["roofline"]["compute_s"], 1e-12))
+    collective = max(ok, key=ratio)
+    longs = [r for r in ok if r["shape"] == "long_500k"
+             and r["arch"] not in ("xlstm-125m", "zamba2-7b")]
+    paperish = max(longs, key=ratio)
+    return worst, collective, paperish
+
+
+def summary(rows):
+    ok = [r for r in rows if r.get("ok")]
+    fail = [r for r in rows if not r.get("ok")]
+    bn = {}
+    for r in ok:
+        bn[r["roofline"]["bottleneck"]] = bn.get(r["roofline"]["bottleneck"], 0) + 1
+    return (f"{len(ok)} ok / {len(fail)} failed; bottleneck histogram: {bn}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args(argv)
+    rows = load(args.mesh, args.variant)
+    print(f"## Dry-run roofline — mesh {args.mesh}, variant {args.variant}")
+    print(summary(rows))
+    print()
+    print(table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips x 197 TFLOP/s)
+  memory term     = HLO_bytes / (chips x 819 GB/s)
+  collective term = collective_bytes / (chips x 50 GB/s/link)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(); collective bytes
+are NOT in cost_analysis — we parse the optimized HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.core.placement import PEAK_FLOPS, HBM_BW, ICI_BW
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:[0-9]+)?|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in an HLO result spec."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-op byte totals from optimized HLO text.
+
+    Counts each op's RESULT shape bytes (for all-reduce == payload; for
+    all-gather == the gathered output, the wire-dominant size)."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "%name = TYPE[SHAPE] all-gather(...)" and fusion-wrapped forms
+        m = re.search(r"=\s*(\S+)\s+(all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)", s)
+        if not m:
+            continue
+        result_spec = m.group(1)
+        op = m.group(2)
+        out[op] += _shape_bytes(result_spec)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective bytes
+    chips: int
+    model_flops: float = 0.0     # 6*N*D useful flops (global)
+    per_collective: Dict[str, int] = dataclasses.field(default_factory=dict)
+    xla_flops: float = 0.0       # raw cost_analysis (cross-check only)
+    xla_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO flops across chips (remat/redundancy)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilization at the roofline lower bound."""
+        denom = self.step_s * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_dev": self.flops, "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio, "mfu": self.mfu,
+            "per_collective": self.per_collective,
+            "xla_flops": self.xla_flops, "xla_bytes": self.xla_bytes,
+        }
+
+
+def from_compiled(compiled, hlo_text: str, chips: int,
+                  model_flops: float = 0.0) -> Roofline:
+    """Roofline terms from the trip-count-aware HLO walk (hlo_walk.py);
+    xla cost_analysis kept as a cross-check (it single-counts nested scan
+    bodies, so the walker is authoritative — see EXPERIMENTS.md §Method)."""
+    from repro.launch import hlo_walk
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    costs = hlo_walk.walk(hlo_text)
+    rl = Roofline(
+        flops=costs.flops, hbm_bytes=costs.bytes,
+        coll_bytes=costs.coll_bytes, chips=chips,
+        model_flops=model_flops,
+        per_collective={k: int(v) for k, v in costs.per_collective.items()},
+    )
+    rl.xla_flops = float(ca.get("flops", 0.0))
+    rl.xla_bytes = float(ca.get("bytes accessed", 0.0))
+    return rl
+
+
+def ideal_memory_bytes(cfg, shape, chips: int) -> float:
+    """Analytic LOWER BOUND on per-device HBM traffic per step (perfect
+    fusion). The walker's bytes term is the fusion-boundary UPPER bound from
+    the CPU-lowered module (TPU fuses more aggressively); the table reports
+    both. Components: weight reads (fwd+bwd+remat), optimizer read/write,
+    residual activations, KV/index traffic for decode."""
+    P = cfg.n_params()
+    Pa = cfg.n_active_params()
+    tokens = shape.global_batch * shape.seq_len
+    d, L = cfg.d_model, cfg.n_layers
+    act = 4 * tokens * d * L * 2  # residual write+read, fwd+bwd, bf16
+    if shape.kind == "train":
+        total = 3 * 2 * Pa * max(tokens / (tokens), 1) + 16 * P + act
+        # 3 weight passes (fwd/bwd/remat) bf16 + grads/m/v fp32 rw
+    elif shape.kind == "prefill":
+        kv = L * tokens * cfg.n_kv_heads * cfg.hd * 2 * 2
+        total = 2 * Pa + act / 4 + kv
+    else:
+        B = shape.global_batch
+        ctx = shape.seq_len
+        if cfg.family == "ssm":
+            state = L * B * 2 * cfg.d_model * cfg.d_model // max(cfg.n_heads, 1)
+            total = 2 * Pa * 1 + state * 2
+        else:
+            k = cfg.memory.top_k
+            idx = B * ctx * cfg.memory.index_dim * 2 * L      # stream index
+            gather = B * k * cfg.n_kv_heads * cfg.hd * 2 * 2 * L
+            total = 2 * Pa + idx + gather
+    return total / chips
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode D = batch tokens (1 step)."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,105 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+No device allocation happens here: params/caches come from jax.eval_shape
+over the real builders, inputs are constructed directly. The same pattern as
+shannon/kernels — weak-type-correct, shardable, zero bytes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.methods import get_sparse_method
+from repro.distributed import sharding as sh
+from repro.models import model as M
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def pick_accum(cfg: ArchConfig, shape: ShapeConfig, data_par: int,
+               budget_bytes: float = 4e9) -> int:
+    """Gradient-accumulation factor bounding per-device remat residuals
+    (L x tokens_dev x d_model x 2B) to ~budget."""
+    tokens_dev = shape.global_batch * shape.seq_len / max(data_par, 1)
+    resid = cfg.n_layers * tokens_dev * cfg.d_model * 2
+    accum = 1
+    while resid / accum > budget_bytes and accum < shape.global_batch:
+        accum *= 2
+    while shape.global_batch % accum:
+        accum //= 2
+    return max(accum, 1)
+
+
+def param_structs(cfg: ArchConfig, tp: int = 16):
+    return jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0), tp=tp))
+
+
+def cache_structs(cfg: ArchConfig, batch: int, max_len: int, tp: int = 16):
+    return jax.eval_shape(lambda: M.make_cache(cfg, batch, max_len, tp=tp))
+
+
+def sparse_structs(cfg: ArchConfig, tp: int = 16):
+    if cfg.family == "ssm":
+        return None
+    init_fn, _ = get_sparse_method(cfg.memory.method if cfg.memory.method in
+                                   ("dsa", "seer", "lserve") else "dsa")
+    return jax.eval_shape(
+        lambda: init_fn(jax.random.PRNGKey(0), cfg, cfg.memory,
+                        stacked=cfg.family != "hybrid"))
+
+
+def batch_structs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict = {}
+    if shape.kind == "train":
+        out["tokens"] = sds((B, S), jnp.int32)
+        out["labels"] = sds((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((B, S), jnp.int32)
+    else:
+        out["token"] = sds((B,), jnp.int32)
+    if cfg.rope_style == "mrope" and shape.kind != "decode":
+        out["positions3"] = sds((3, B, S), jnp.int32)
+    if cfg.frontend == "vision_stub" and shape.kind != "decode":
+        out["img_embeds"] = sds((B, min(256, S // 4), cfg.d_model),
+                                jnp.bfloat16)
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                tp: int = 16, fsdp: Optional[bool] = None) -> Dict:
+    """Everything dryrun needs: structs + shardings per cell.
+
+    ``fsdp``: None = auto (params >= 5B). The optimized decode variant passes
+    False — weights stay TP-resident instead of being re-gathered every step
+    (§Perf iteration 2)."""
+    out: Dict = {"kind": shape.kind}
+    pspec = sh.param_specs(param_structs(cfg, tp), cfg, mesh, fsdp=fsdp)
+    out["params"] = param_structs(cfg, tp)
+    out["params_sharding"] = sh.make_shardings(pspec, mesh)
+    out["batch"] = batch_structs(cfg, shape)
+    bspec = sh.batch_specs(cfg, shape, mesh)
+    out["batch_sharding"] = {
+        k: NamedSharding(mesh, bspec[k]) for k in out["batch"]
+        if k in bspec
+    }
+    # decode shapes carry the KV cache / state
+    if shape.kind == "decode":
+        caches = cache_structs(cfg, shape.global_batch, shape.seq_len, tp)
+        out["caches"] = caches
+        cspec = sh.cache_specs(caches, cfg, shape, mesh)
+        out["caches_sharding"] = sh.make_shardings(cspec, mesh)
+        sp = sparse_structs(cfg, tp)
+        if sp is not None and cfg.family != "ssm":
+            out["sparse_params"] = sp
+            out["sparse_sharding"] = sh.make_shardings(
+                sh.method_specs(sp, cfg, mesh), mesh)
+    return out

@@ -1,0 +1,9 @@
+from repro.models.model import (
+    init_params,
+    forward,
+    train_loss,
+    prefill,
+    decode_step,
+    make_cache,
+    last_logits,
+)

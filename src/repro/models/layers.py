@@ -1,0 +1,171 @@
+"""Core layers: RMSNorm, RoPE (standard / partial / M-RoPE), SwiGLU MLP,
+embeddings. Pure functions over param pytrees; init mirrors apply.
+
+Weights are stored in ``cfg.dtype`` (bf16 by default); math runs in fp32 where
+numerically sensitive (norms, softmax, rope) and bf16 on matmul paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm_init(d: int, dtype) -> Params:
+    return {"w": ones((d,), jnp.float32)}
+
+
+def rms_norm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["w"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE family
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, rotary_dim: Optional[int] = None):
+    """Inverse frequencies for the rotary embedding (fp32)."""
+    rd = rotary_dim or head_dim
+    return 1.0 / (theta ** (np.arange(0, rd, 2, dtype=np.float32) / rd))
+
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float,
+                 rotary_dim: Optional[int] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [..., S] -> cos/sin [..., S, rd//2] in fp32."""
+    inv = jnp.asarray(rope_freqs(head_dim, theta, rotary_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions3: jnp.ndarray, head_dim: int, theta: float,
+                  sections: Tuple[int, int, int]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Qwen2-VL M-RoPE. positions3 [3, B, S] (temporal, height, width).
+
+    Each of the 3 position streams owns a contiguous slice of the head_dim/2
+    frequency channels (sections sum to head_dim//2).
+    """
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    inv = jnp.asarray(rope_freqs(head_dim, theta))  # [hd//2]
+    ang = positions3.astype(jnp.float32)[..., None] * inv  # [3, B, S, hd//2]
+    idx = jnp.asarray(
+        np.repeat(np.arange(3), np.asarray(sections)), dtype=jnp.int32
+    )  # [hd//2] -> which stream owns each channel
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1), idx[None, None, :, None], axis=-1
+    )[..., 0]  # [B, S, hd//2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [B, S, H, hd]; cos/sin [B, S, rd//2] (broadcast over heads).
+
+    Rotates the first ``2 * cos.shape[-1]`` channels (partial RoPE when the
+    rotary dim is smaller than head_dim, as in GLM / DeepSeek indexer).
+    """
+    rd2 = cos.shape[-1]
+    xf = x.astype(jnp.float32)
+    rot, rest = xf[..., : 2 * rd2], xf[..., 2 * rd2:]
+    x1, x2 = rot[..., :rd2], rot[..., rd2:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s, rest], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, d, ff, dt),
+        "w3": dense_init(k2, d, ff, dt),
+        "w2": dense_init(k3, ff, d, dt, scale=1.0 / np.sqrt(2 * cfg.n_layers * ff)),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ArchConfig) -> Params:
+    dt = dtype_of(cfg)
+    return {"w": dense_init(key, cfg.padded_vocab, cfg.d_model, dt, scale=0.02)}
+
+
+def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def lm_head_init(key, cfg: ArchConfig) -> Params:
+    dt = dtype_of(cfg)
+    return {"w": dense_init(key, cfg.d_model, cfg.padded_vocab, dt)}
+
+
+def lm_head(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Logits over the PADDED vocab; pad rows masked to -inf."""
+    logits = x @ p["w"]
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = cfg.padded_vocab - cfg.vocab_size
+        mask = jnp.concatenate(
+            [jnp.zeros((cfg.vocab_size,), logits.dtype),
+             jnp.full((pad,), jnp.finfo(jnp.float32).min, logits.dtype)]
+        )
+        logits = logits + mask
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy, fp32 logsumexp."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

@@ -1,0 +1,474 @@
+"""Model builder: init / forward / prefill / decode for all 10 assigned
+architectures, with scan-over-layers (stacked params) so HLO size and compile
+time stay flat in depth.
+
+Families:
+  dense | moe | audio | vlm : transformer (GQA attn + SwiGLU-or-MoE FFN)
+  hybrid (zamba2)           : 13 x (6 Mamba2 + shared attn/MLP block) + 3 Mamba2
+  ssm (xlstm)               : (mLSTM, sLSTM) pairs
+
+Caches are dataclass-free pytrees (dicts) so they cross jit boundaries and
+shard cleanly. ``length`` is a traced scalar.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+
+Params = Dict
+
+# §Perf (train cells): Megatron-style sequence-parallel residual stream.
+# When set to a PartitionSpec, the residual activations between layers are
+# constrained to it (sequence sharded over the model axis) — GSPMD then
+# lowers the TP boundary as all-gather + reduce-scatter pairs instead of
+# full fp32 all-reduces of [B, S, d]. Variant-gated from launch/dryrun.py.
+SP_RESIDUAL = {"spec": None}
+
+
+def set_sp_residual(spec):
+    SP_RESIDUAL["spec"] = spec
+
+
+def _sp(x):
+    if SP_RESIDUAL["spec"] is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, SP_RESIDUAL["spec"])
+
+
+def _sp_gather(h):
+    """Megatron-SP boundary: explicitly all-gather the normed activations
+    entering the TP projections (bf16), instead of letting GSPMD pick an
+    interior resharding point."""
+    spec = SP_RESIDUAL["spec"]
+    if spec is None:
+        return h
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(h, P(spec[0], None, None))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _tf_layer_init(key, cfg: ArchConfig, tp: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn": A.attn_init(k1, cfg, tp),
+        "attn_norm": L.rms_norm_init(cfg.d_model, None),
+        "mlp_norm": L.rms_norm_init(cfg.d_model, None),
+    }
+    if cfg.n_experts:
+        p["moe"] = M.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg)
+    return p
+
+
+def _stacked(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ArchConfig, key, tp: int = 16) -> Params:
+    ke, kl, kf, kh = jax.random.split(key, 4)
+    params: Params = {
+        "embed": L.embed_init(ke, cfg),
+        "final_norm": L.rms_norm_init(cfg.d_model, None),
+        "lm_head": L.lm_head_init(kh, cfg),
+    }
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.shared_attn_every  # 13
+        per = cfg.shared_attn_every                      # 6
+        tail = cfg.n_layers - n_super * per              # 3
+        kb, kt, ks = jax.random.split(kl, 3)
+        body_keys = jax.random.split(kb, n_super * per).reshape(n_super, per, 2)
+        params["body"] = jax.vmap(jax.vmap(lambda k: _mamba_layer_init(k, cfg)))(
+            body_keys)
+        params["tail"] = _stacked(lambda k: _mamba_layer_init(k, cfg), kt, tail)
+        params["shared"] = _tf_layer_init(ks, cfg, tp)
+    elif cfg.xlstm_pattern:
+        nb = cfg.n_layers // len(cfg.xlstm_pattern)
+        km, ks = jax.random.split(kl)
+        params["mlstm"] = _stacked(
+            lambda k: {"pre": L.rms_norm_init(cfg.d_model, None),
+                       "blk": X.mlstm_init(k, cfg)}, km, nb)
+        params["slstm"] = _stacked(
+            lambda k: {"pre": L.rms_norm_init(cfg.d_model, None),
+                       "blk": X.slstm_init(k, cfg)}, ks, nb)
+    else:
+        params["layers"] = _stacked(
+            lambda k: _tf_layer_init(k, cfg, tp), kl, cfg.n_layers)
+    return params
+
+
+def _mamba_layer_init(key, cfg: ArchConfig) -> Params:
+    return {"norm": L.rms_norm_init(cfg.d_model, None),
+            "mamba": S.mamba_init(key, cfg)}
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+
+def _rope_tables(cfg: ArchConfig, positions, positions3=None):
+    if cfg.rope_style == "none":
+        return None, None
+    if cfg.rope_style == "mrope":
+        assert positions3 is not None
+        return L.mrope_cos_sin(positions3, cfg.hd, cfg.rope_theta,
+                               cfg.mrope_sections)
+    return L.rope_cos_sin(positions, cfg.hd, cfg.rope_theta)
+
+
+def _attn_out(lp: Params, out: jnp.ndarray, cfg: ArchConfig, tp: int):
+    """Apply dead-head mask then o-projection. out [B,S,Hp,hd] -> [B,S,d]."""
+    hm = A.head_mask(cfg, tp)
+    out = out * hm[None, None, :, None].astype(out.dtype)
+    B, Sq, HP, hd = out.shape
+    return out.reshape(B, Sq, HP * hd) @ lp["wo"]
+
+
+def _tf_layer_full(lp, x, cos, sin, cfg, tp):
+    """Full-sequence transformer layer; returns (x, aux, (k, v))."""
+    h = _sp_gather(L.rms_norm(lp["attn_norm"], x, cfg.norm_eps))
+    q, k, v = A.project_qkv(lp["attn"], h, cos, sin, cfg, tp)
+    attn = A.attention_full(q, k, v, cfg, tp=tp)
+    x = x + _attn_out(lp["attn"], attn, cfg, tp)
+    x = _sp(x)
+    h = _sp_gather(L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps))
+    if cfg.n_experts:
+        y, aux = M.moe_apply(lp["moe"], h, cfg)
+    else:
+        y, aux = L.mlp(lp["mlp"], h), jnp.zeros((), jnp.float32)
+    return x + y, aux, (k, v)
+
+
+def _tf_layer_decode(lp, x, cos, sin, cfg, tp, kc, vc, length, sparse_fn=None,
+                     sparse_params=None):
+    """One-token transformer layer vs cache; returns (x, kc, vc, sp_new).
+
+    A stateful sparse_fn may return (attn, new_sparse_params) — the
+    incremental index cache of the prepare-memory stage lives there."""
+    h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+    q, k, v = A.project_qkv(lp["attn"], h, cos, sin, cfg, tp)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, length, 0, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, length, 0, 0))
+    sp_new = sparse_params
+    if sparse_fn is not None:
+        res = sparse_fn(q, kc, vc, length + 1, sparse_params, k_new=k)
+        attn, sp_new = res if isinstance(res, tuple) else (res, sparse_params)
+    else:
+        attn = A.attention_decode(q, kc, vc, length + 1, cfg, tp=tp)
+    x = x + _attn_out(lp["attn"], attn, cfg, tp)
+    h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+    if cfg.n_experts:
+        y, _ = M.moe_apply(lp["moe"], h, cfg)
+    else:
+        y = L.mlp(lp["mlp"], h)
+    return x + y, kc, vc, sp_new
+
+
+def _maybe_ckpt(fn, remat: bool):
+    return jax.checkpoint(fn) if remat else fn
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill full-sequence pass)
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    positions3: Optional[jnp.ndarray] = None,
+    img_embeds: Optional[jnp.ndarray] = None,
+    collect_cache: bool = False,
+    remat: bool = False,
+    tp: int = 16,
+):
+    """tokens [B, S] -> (hidden [B,S,d], aux, caches-or-None)."""
+    B, Sq = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    if img_embeds is not None:  # vlm stub: patch embeddings overwrite prefix
+        x = jax.lax.dynamic_update_slice(x, img_embeds.astype(x.dtype), (0, 0, 0))
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    cos, sin = _rope_tables(cfg, positions, positions3)
+
+    if cfg.family == "hybrid":
+        return _hybrid_forward(params, cfg, x, cos, sin, collect_cache, remat, tp)
+    if cfg.xlstm_pattern:
+        return _xlstm_forward(params, cfg, x, collect_cache, remat)
+
+    def layer_fn(carry, lp):
+        x, aux = carry
+        x, aux_l, kv = _tf_layer_full(lp, x, cos, sin, cfg, tp)
+        return (_sp(x), aux + aux_l), kv if collect_cache else None
+
+    (x, aux), kvs = jax.lax.scan(_maybe_ckpt(layer_fn, remat), (x, jnp.zeros((), jnp.float32)),
+                                 params["layers"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    caches = None
+    if collect_cache:
+        caches = {"k": kvs[0], "v": kvs[1], "length": jnp.asarray(Sq, jnp.int32)}
+    return x, aux, caches
+
+
+def _hybrid_forward(params, cfg, x, cos, sin, collect_cache, remat, tp):
+    def super_fn(carry, lp):
+        x, aux = carry
+        body_lp, shared_kv_unused = lp, None
+
+        def mamba_fn(x, mlp):
+            h = L.rms_norm(mlp["norm"], x, cfg.norm_eps)
+            y, st = S.mamba_forward(mlp["mamba"], h, cfg)
+            return x + y, st if collect_cache else None
+
+        x, states = jax.lax.scan(mamba_fn, x, body_lp)
+        x, aux_l, kv = _tf_layer_full(params["shared"], x, cos, sin, cfg, tp)
+        return (x, aux + aux_l), (states, kv if collect_cache else None)
+
+    (x, aux), (body_states, shared_kvs) = jax.lax.scan(
+        _maybe_ckpt(super_fn, remat), (x, jnp.zeros((), jnp.float32)), params["body"])
+
+    def tail_fn(x, mlp):
+        h = L.rms_norm(mlp["norm"], x, cfg.norm_eps)
+        y, st = S.mamba_forward(mlp["mamba"], h, cfg)
+        return x + y, st if collect_cache else None
+
+    x, tail_states = jax.lax.scan(_maybe_ckpt(tail_fn, remat), x, params["tail"])
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    caches = None
+    if collect_cache:
+        caches = {
+            "body_ssm": body_states[0], "body_conv": body_states[1],
+            "tail_ssm": tail_states[0], "tail_conv": tail_states[1],
+            "shared_k": shared_kvs[0], "shared_v": shared_kvs[1],
+            "length": jnp.asarray(x.shape[1], jnp.int32),
+        }
+    return x, aux, caches
+
+
+def _xlstm_forward(params, cfg, x, collect_cache, remat, states=None):
+    nb = cfg.n_layers // 2
+
+    def pair_fn(carry, lp):
+        x = carry
+        mlp, slp, st_in = lp
+        y, mstate = X.mlstm_forward(
+            mlp["blk"], L.rms_norm(mlp["pre"], x, cfg.norm_eps), cfg,
+            None if st_in is None else st_in[0])
+        x = x + y
+        y, sstate = X.slstm_forward(
+            slp["blk"], L.rms_norm(slp["pre"], x, cfg.norm_eps), cfg,
+            None if st_in is None else st_in[1])
+        x = x + y
+        return x, (mstate, sstate) if collect_cache else None
+
+    xs = (params["mlstm"], params["slstm"], states)
+    if states is None:
+        xs = (params["mlstm"], params["slstm"])
+        fn = lambda c, lp: pair_fn(c, (lp[0], lp[1], None))
+    else:
+        fn = pair_fn
+    x, new_states = jax.lax.scan(_maybe_ckpt(fn, remat), x, xs)
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    caches = None
+    if collect_cache:
+        caches = {"states": new_states,
+                  "length": jnp.asarray(x.shape[1], jnp.int32)}
+    return x, jnp.zeros((), jnp.float32), caches
+
+
+# ---------------------------------------------------------------------------
+# losses / logits
+# ---------------------------------------------------------------------------
+
+MOE_AUX_COEF = 0.01
+
+
+def train_loss(params, cfg: ArchConfig, batch: Dict, *, remat: bool = True,
+               tp: int = 16) -> jnp.ndarray:
+    x, aux, _ = forward(params, cfg, batch["tokens"],
+                        positions3=batch.get("positions3"),
+                        img_embeds=batch.get("img_embeds"),
+                        remat=remat, tp=tp)
+    logits = L.lm_head(params["lm_head"], x, cfg)
+    loss = L.cross_entropy(logits, batch["labels"])
+    return loss + MOE_AUX_COEF * aux
+
+
+def last_logits(params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    return L.lm_head(params["lm_head"], x[:, -1:], cfg)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_len: int, tp: int = 16,
+               dtype=None) -> Dict:
+    dt = dtype or L.dtype_of(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        per = cfg.shared_attn_every
+        tail = cfg.n_layers - n_super * per
+        ssm, conv = S.mamba_state_init(cfg, batch)
+        stack = lambda lead, t: jax.tree.map(
+            lambda a: jnp.zeros(lead + a.shape, a.dtype), t)
+        return {
+            "body_ssm": stack((n_super, per), ssm),
+            "body_conv": stack((n_super, per), conv),
+            "tail_ssm": stack((tail,), ssm),
+            "tail_conv": stack((tail,), conv),
+            "shared_k": jnp.zeros((n_super, batch, max_len, kv, hd), dt),
+            "shared_v": jnp.zeros((n_super, batch, max_len, kv, hd), dt),
+            "length": jnp.zeros((), jnp.int32),
+        }
+    if cfg.xlstm_pattern:
+        nb = cfg.n_layers // 2
+        m = X.mlstm_state_init(cfg, batch)
+        s = X.slstm_state_init(cfg, batch)
+        stack = lambda t: tuple(jnp.zeros((nb,) + a.shape, a.dtype) for a in t)
+        return {"states": (stack(m), stack(s)), "length": jnp.zeros((), jnp.int32)}
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), dt),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, max_len: Optional[int] = None,
+            positions3=None, img_embeds=None, remat: bool = False, tp: int = 16):
+    """Full prompt pass -> (last_logits [B, V], caches).
+
+    Caches are padded to ``max_len`` (>= S) so decode can continue in place.
+    """
+    B, Sq = tokens.shape
+    max_len = max_len or Sq
+    x, _, caches = forward(params, cfg, tokens, positions3=positions3,
+                           img_embeds=img_embeds, collect_cache=True,
+                           remat=remat, tp=tp)
+    if caches is not None and "k" in caches and max_len > Sq:
+        pad = max_len - Sq
+        caches["k"] = jnp.pad(caches["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        caches["v"] = jnp.pad(caches["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    if caches is not None and "shared_k" in caches and max_len > Sq:
+        pad = max_len - Sq
+        caches["shared_k"] = jnp.pad(
+            caches["shared_k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        caches["shared_v"] = jnp.pad(
+            caches["shared_v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return last_logits(params, cfg, x), caches
+
+
+def decode_step(params, cfg: ArchConfig, token, caches, *, tp: int = 16,
+                sparse_fn=None, sparse_params=None, sparse_stateful=False,
+                positions3=None):
+    """token [B] int32 + caches -> (logits [B, V], caches).
+
+    ``sparse_fn(q, kcache, vcache, length, sparse_params_l) -> attn_out``
+    lets the memory pipeline replace dense decode attention (DESIGN.md §2).
+    ``sparse_params`` is a layer-stacked pytree scanned alongside the layers
+    (per-layer indexer weights, e.g. the DSA lightning indexer). With
+    ``sparse_stateful=True`` the sparse_fn returns (attn, new_params) —
+    carrying an incremental index cache (prepare-once) — and decode_step
+    returns (logits, caches, new_sparse_params).
+    """
+    B = token.shape[0]
+    length = caches["length"]
+    x = L.embed(params["embed"], token[:, None])
+    positions = jnp.broadcast_to(length[None, None], (B, 1))
+    if cfg.rope_style == "mrope" and positions3 is None:
+        positions3 = jnp.broadcast_to(length[None, None, None], (3, B, 1))
+    cos, sin = _rope_tables(cfg, positions, positions3)
+
+    if cfg.family == "hybrid":
+        x, caches = _hybrid_decode(params, cfg, x, cos, sin, caches, tp,
+                                   sparse_fn, sparse_params)
+    elif cfg.xlstm_pattern:
+        # _xlstm_forward applies final_norm itself — return directly.
+        x, _, new = _xlstm_forward(params, cfg, x, True, False,
+                                   states=caches["states"])
+        caches = dict(caches, states=new["states"], length=length + 1)
+        return last_logits(params, cfg, x), caches
+    else:
+        stateful = sparse_stateful
+
+        def layer_fn(x, lp_kv):
+            lp, kc, vc, sp = lp_kv
+            x, kc, vc, sp_new = _tf_layer_decode(lp, x, cos, sin, cfg, tp, kc,
+                                                 vc, length, sparse_fn, sp)
+            return x, ((kc, vc, sp_new) if stateful else (kc, vc))
+
+        sp_stack = sparse_params
+        if sp_stack is None:
+            sp_stack = jnp.zeros((cfg.n_layers,), jnp.int32)  # dummy scan leaf
+        x, ys = jax.lax.scan(
+            layer_fn, x, (params["layers"], caches["k"], caches["v"], sp_stack))
+        if stateful:
+            k_new, v_new, sp_new = ys
+        else:
+            (k_new, v_new), sp_new = ys, sparse_params
+        caches = dict(caches, k=k_new, v=v_new, length=length + 1)
+        x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = last_logits(params, cfg, x)
+        return (logits, caches, sp_new) if stateful else (logits, caches)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return last_logits(params, cfg, x), caches
+
+
+def _hybrid_decode(params, cfg, x, cos, sin, caches, tp, sparse_fn,
+                   sparse_params=None):
+    length = caches["length"]
+
+    def super_fn(x, lp):
+        body_lp, ssm_st, conv_st, kc, vc = lp
+
+        def mamba_fn(x, mlp_st):
+            mlp, sst, cst = mlp_st
+            h = L.rms_norm(mlp["norm"], x, cfg.norm_eps)
+            y, (sst, cst) = S.mamba_decode(mlp["mamba"], h, cfg, (sst, cst))
+            return x + y, (sst, cst)
+
+        x, (ssm_new, conv_new) = jax.lax.scan(
+            mamba_fn, x, (body_lp, ssm_st, conv_st))
+        x, kc, vc, _ = _tf_layer_decode(params["shared"], x, cos, sin, cfg,
+                                        tp, kc, vc, length, sparse_fn,
+                                        sparse_params)
+        return x, (ssm_new, conv_new, kc, vc)
+
+    x, (bs, bc, sk, sv) = jax.lax.scan(
+        super_fn, x,
+        (params["body"], caches["body_ssm"], caches["body_conv"],
+         caches["shared_k"], caches["shared_v"]))
+
+    def tail_fn(x, mlp_st):
+        mlp, sst, cst = mlp_st
+        h = L.rms_norm(mlp["norm"], x, cfg.norm_eps)
+        y, (sst, cst) = S.mamba_decode(mlp["mamba"], h, cfg, (sst, cst))
+        return x + y, (sst, cst)
+
+    x, (ts, tc) = jax.lax.scan(
+        tail_fn, x, (params["tail"], caches["tail_ssm"], caches["tail_conv"]))
+    caches = dict(caches, body_ssm=bs, body_conv=bc, tail_ssm=ts, tail_conv=tc,
+                  shared_k=sk, shared_v=sv, length=length + 1)
+    return x, caches

@@ -1,0 +1,118 @@
+"""Top-k MoE with GShard/Switch-style capacity dispatch (TPU-native, dense
+einsum dispatch — no data-dependent shapes, shardable under GSPMD).
+
+Tokens are processed in fixed-size groups (``group_size``); each group builds a
+[t, E, C] one-hot dispatch tensor (bounded < ~100 MB), experts run as a batched
+[E, C, d] x [E, d, ff] einsum whose ff dim TP-shards on the model axis, and a
+Switch-style load-balancing aux loss is returned. The same path serves both
+training (t = sequence chunk) and batched decode (t = batch).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = Dict[str, jnp.ndarray]
+
+# §Perf iteration (granite train cell): when set to a mesh axis name, the
+# dispatch/combine tensors get expert-dim sharding constraints so each EP
+# shard computes ONLY its experts' slices (otherwise GSPMD all-gathers the
+# [t, E, C] dispatch one-hot to every shard — 1.9 TiB/step at granite scale).
+EP_CONSTRAINT = {"axis": None}
+
+
+def set_ep_constraint(axis):
+    EP_CONSTRAINT["axis"] = axis
+
+
+def _ep(x, spec_fn):
+    axis = EP_CONSTRAINT["axis"]
+    if axis is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, spec_fn(axis))
+
+
+def moe_init(key, cfg: ArchConfig) -> Params:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.dense_init(ks[0], d, E, jnp.float32, scale=0.02),
+        "w1": (jax.random.normal(ks[1], (E, d, ff), jnp.float32) / np.sqrt(d)).astype(dt),
+        "w3": (jax.random.normal(ks[2], (E, d, ff), jnp.float32) / np.sqrt(d)).astype(dt),
+        "w2": (jax.random.normal(ks[3], (E, ff, d), jnp.float32)
+               / np.sqrt(2 * cfg.n_layers * ff)).astype(dt),
+    }
+
+
+def capacity(t: int, cfg: ArchConfig) -> int:
+    c = int(np.ceil(t * cfg.experts_per_token / cfg.n_experts * cfg.capacity_factor))
+    return max(4 * ((c + 3) // 4), 4)
+
+
+def _moe_group(p: Params, x: jnp.ndarray, cfg: ArchConfig, cap: int):
+    """x [t, d] -> (y [t, d], aux scalar). One dispatch group."""
+    t, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    logits = x.astype(jnp.float32) @ p["router"]  # [t, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    wgt, widx = jax.lax.top_k(probs, k)  # [t, k]
+    wgt = wgt / jnp.maximum(wgt.sum(-1, keepdims=True), 1e-9)
+
+    # assignment mask [t, E] (top-k experts are distinct so sum over k is 0/1)
+    assign = jax.nn.one_hot(widx, E, dtype=jnp.float32).sum(axis=1)  # [t, E]
+    # position of each token within its expert's capacity buffer
+    pos = jnp.cumsum(assign, axis=0) - assign  # [t, E]
+    keep = (pos < cap) * assign
+    # weighted expert coefficient per token
+    wgt_e = (jax.nn.one_hot(widx, E, dtype=jnp.float32) * wgt[..., None]).sum(1)  # [t, E]
+
+    from jax.sharding import PartitionSpec as P
+    disp = keep[..., None] * jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                                            dtype=jnp.float32)  # [t, E, C]
+    disp = _ep(disp, lambda ax: P(None, ax, None))
+    disp_b = disp.astype(x.dtype)
+    xe = jnp.einsum("tec,td->ecd", disp_b, x)  # [E, C, d]
+    xe = _ep(xe, lambda ax: P(ax, None, None))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w1"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w3"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w2"])  # [E, C, d]
+    ye = _ep(ye, lambda ax: P(ax, None, None))
+    comb = (disp * (wgt_e * keep.astype(jnp.float32))[..., None]).astype(x.dtype)
+    y = jnp.einsum("tec,ecd->td", comb, ye)
+
+    # Switch load-balance aux: E * sum_e f_e * mean_prob_e
+    frac = assign.mean(axis=0)
+    mean_p = probs.mean(axis=0)
+    aux = E * jnp.sum(frac * mean_p)
+    return y, aux
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+              group_size: int = 2048) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, d] -> (y [B, S, d], aux). Groups scan over flattened tokens."""
+    B, S, d = x.shape
+    tokens = B * S
+    g = min(group_size, tokens)
+    n_groups = (tokens + g - 1) // g
+    pad = n_groups * g - tokens
+    flat = x.reshape(tokens, d)
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    flat = flat.reshape(n_groups, g, d)
+    cap = capacity(g, cfg)
+
+    def body(carry, xg):
+        y, aux = _moe_group(p, xg, cfg, cap)
+        return carry + aux, y
+
+    aux_total, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32), flat)
+    y = ys.reshape(n_groups * g, d)[:tokens].reshape(B, S, d)
+    return y, aux_total / n_groups

@@ -1,0 +1,199 @@
+"""Mamba2 (SSD) block — chunked matmul formulation for train/prefill, O(1)
+recurrent state update for decode. Single B/C group (ssm_groups == 1).
+
+TP layout: the z/x/B/C/dt projections are SEPARATE weights (not one fused
+in_proj) so each output can shard independently — z/x/dt shard on d_inner/H
+over the model axis (all downstream per-channel ops stay local), while the
+small B/C/state tensors replicate. The fused-projection variant would slice a
+sharded concatenated axis and force resharding collectives.
+
+Memory discipline: the intra-chunk decay tensor exp(cum_i - cum_j) is formed
+per (chunk, head-group) only — lax.scan over chunks x lax.map over head
+groups bounds the live intermediate to [B, cs, cs, hg] (~MBs). The
+numerically-safe *difference* form (exp argument <= 0) is kept — the
+factorized exp(cum_i)*exp(-cum_j) variant overflows fp32 for fast-decaying
+heads even at init.
+
+State: ssm [B, H, P, N]; conv (x [B, di, K-1], B [B, N, K-1], C [B, N, K-1]).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = Dict
+
+HEAD_GROUP = 16  # heads per intra-chunk block
+
+
+def mamba_init(key, cfg: ArchConfig) -> Params:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.ssm_conv
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 9)
+    u = jax.random.uniform(ks[0], (H,), jnp.float32)
+    dt0 = jnp.exp(u * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3))
+    conv = lambda k, c: (jax.random.normal(k, (c, K), jnp.float32)
+                         / np.sqrt(K)).astype(dt)
+    return {
+        "w_z": L.dense_init(ks[1], d, di, dt),
+        "w_x": L.dense_init(ks[2], d, di, dt),
+        "w_B": L.dense_init(ks[3], d, N, dt),
+        "w_C": L.dense_init(ks[4], d, N, dt),
+        "w_dt": L.dense_init(ks[5], d, H, dt),
+        "conv_x": conv(ks[6], di),
+        "conv_B": conv(ks[7], N),
+        "conv_C": conv(ks[8], N),
+        "conv_bx": L.zeros((di,), dt),
+        "conv_bB": L.zeros((N,), dt),
+        "conv_bC": L.zeros((N,), dt),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": L.ones((H,), jnp.float32),
+        "dt_bias": dt0 + jnp.log(-jnp.expm1(-dt0)),  # inverse softplus
+        "norm": L.ones((di,), jnp.float32),
+        "out_proj": L.dense_init(ks[0], di, d, dt,
+                                 scale=1.0 / np.sqrt(2 * cfg.n_layers * di)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray = None):
+    """Depthwise causal conv over S. x [B, S, C]; w [C, K]; state [B,C,K-1]."""
+    B, S, C = x.shape
+    K = w.shape[1]
+    if state is None:
+        padded = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        padded = jnp.concatenate([jnp.moveaxis(state, 1, 2), x], axis=1)
+    out = sum(padded[:, k: k + S, :] * w[:, k] for k in range(K))
+    new_state = jnp.moveaxis(padded[:, -(K - 1):, :], 1, 2) if K > 1 else None
+    return jax.nn.silu(out + b), new_state
+
+
+def _gated_norm(y: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray, eps: float):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * w
+
+
+def _project(p: Params, x: jnp.ndarray, cfg: ArchConfig, conv_state=None):
+    """Shared prologue: projections + causal convs + dt/A prep."""
+    cs_x, cs_B, cs_C = conv_state if conv_state else (None, None, None)
+    z = x @ p["w_z"]
+    xr, ns_x = _causal_conv(x @ p["w_x"], p["conv_x"], p["conv_bx"], cs_x)
+    Br, ns_B = _causal_conv(x @ p["w_B"], p["conv_B"], p["conv_bB"], cs_B)
+    Cr, ns_C = _causal_conv(x @ p["w_C"], p["conv_C"], p["conv_bC"], cs_C)
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    return z, xr, Br, Cr, dt, A, (ns_x, ns_B, ns_C)
+
+
+def _intra_chunk(scores, cum, x_c, mask):
+    """One chunk's intra term, head-grouped.
+
+    scores [B,i,j]; cum [B,cs,H]; x_c [B,cs,H,P] -> [B,cs,H,P]."""
+    B, cs, H = cum.shape
+    hg = min(HEAD_GROUP, H)
+    n_hg = (H + hg - 1) // hg
+    pad = n_hg * hg - H
+    if pad:
+        cum = jnp.pad(cum, ((0, 0), (0, 0), (0, pad)))
+        x_c = jnp.pad(x_c, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    cum_g = jnp.moveaxis(cum.reshape(B, cs, n_hg, hg), 2, 0)
+    x_g = jnp.moveaxis(x_c.reshape(B, cs, n_hg, hg, -1), 2, 0)
+
+    def one_group(args):
+        cg, xg = args
+        diff = cg[:, :, None, :] - cg[:, None, :, :]          # [B,i,j,hg]
+        Lm = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        return jnp.einsum("bij,bijh,bjhp->bihp", scores, Lm, xg)
+
+    y = jax.lax.map(one_group, (cum_g, x_g))                   # [n_hg,B,cs,hg,P]
+    y = jnp.moveaxis(y, 0, 2).reshape(B, cs, n_hg * hg, -1)
+    return y[:, :, :H]
+
+
+def mamba_forward(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                  init_state: Tuple = None):
+    """x [B, S, d] -> (y [B, S, d], (ssm_state, conv_states)). Chunked SSD."""
+    B, S, d = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    cs = min(cfg.ssm_chunk, S)
+    assert S % cs == 0, (S, cs)
+    nc = S // cs
+
+    conv_in = None if init_state is None else init_state[1]
+    z, xr, Br, Cr, dt, A, conv_state = _project(p, x, cfg, conv_in)
+    xs = xr.reshape(B, S, H, P).astype(jnp.float32)
+    Bm = Br.astype(jnp.float32)
+    Cm = Cr.astype(jnp.float32)
+    dA = dt * A
+    xdt = xs * dt[..., None]
+
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+          else init_state[0].astype(jnp.float32))
+
+    def chunk_body(state, inp):
+        dA_c, x_c, B_c, C_c, xs_c = inp
+        cum = jnp.cumsum(dA_c, axis=1)                       # [B, cs, H]
+        scores = jnp.einsum("bin,bjn->bij", C_c, B_c)
+        y = _intra_chunk(scores, cum, x_c, mask)
+        y = y + jnp.einsum("bin,bih,bhpn->bihp", C_c, jnp.exp(cum), state)
+        y = y + xs_c * p["D"][None, None, :, None]
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)
+        new_state = (state * jnp.exp(cum[:, -1, :])[:, :, None, None]
+                     + jnp.einsum("bjn,bjh,bjhp->bhpn", B_c, decay_to_end, x_c))
+        return new_state, y
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape((B, nc, cs) + a.shape[2:]), 1, 0)
+
+    final_state, ys = jax.lax.scan(
+        chunk_body, s0,
+        (to_chunks(dA), to_chunks(xdt), to_chunks(Bm), to_chunks(Cm),
+         to_chunks(xs)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, (final_state, conv_state)
+
+
+def mamba_decode(p: Params, x: jnp.ndarray, cfg: ArchConfig, state: Tuple):
+    """Single-token step. x [B, 1, d]; state (ssm, conv_states)."""
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    ssm_state, conv_in = state
+    z, xr, Br, Cr, dt, A, conv_state = _project(p, x, cfg, conv_in)
+    xs = xr[:, 0].reshape(B, H, P).astype(jnp.float32)
+    Bm = Br[:, 0].astype(jnp.float32)
+    Cm = Cr[:, 0].astype(jnp.float32)
+    dt = dt[:, 0]                                            # [B, H]
+    decay = jnp.exp(dt * A)
+    ssm_state = (ssm_state.astype(jnp.float32) * decay[..., None, None]
+                 + jnp.einsum("bhp,bn->bhpn", xs * dt[..., None], Bm))
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, Cm) + xs * p["D"][None, :, None]
+    y = y.reshape(B, 1, di)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, (ssm_state, conv_state)
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    K = cfg.ssm_conv
+    return (
+        jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+        (
+            jnp.zeros((batch, cfg.d_inner, K - 1), dtype),
+            jnp.zeros((batch, cfg.ssm_state, K - 1), dtype),
+            jnp.zeros((batch, cfg.ssm_state, K - 1), dtype),
+        ),
+    )

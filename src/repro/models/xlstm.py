@@ -1,0 +1,158 @@
+"""xLSTM blocks: mLSTM (matrix memory, exp gating) and sLSTM (scalar memory,
+block-diagonal recurrence). [arXiv:2405.04517]
+
+Both use the stabilized recurrent formulation (running max m_t) and execute as
+a lax.scan over time — exact, O(1)-state decode for free. (A chunked-parallel
+mLSTM would speed up training; this arch is attention-free so it is outside
+the paper's hillclimb targets, see DESIGN.md §4.)
+
+States:
+  mLSTM: (C [B,H,dk,dv], n [B,H,dk], m [B,H])
+  sLSTM: (c [B,H,dh], n [B,H,dh], h [B,H,dh], m [B,H,dh])
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    di = 2 * d  # expansion 2
+    H = cfg.n_heads
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up": L.dense_init(ks[0], d, 2 * di, dt),  # (x_inner, z gate)
+        "wq": L.dense_init(ks[1], di, di, dt),
+        "wk": L.dense_init(ks[2], di, di, dt),
+        "wv": L.dense_init(ks[3], di, di, dt),
+        "wi": L.dense_init(ks[4], di, H, jnp.float32, scale=0.02),
+        "wf": L.dense_init(ks[5], di, H, jnp.float32, scale=0.02),
+        "bi": L.zeros((H,), jnp.float32),
+        "bf": L.ones((H,), jnp.float32) * 3.0,  # forget-dominant init
+        "norm": L.ones((di,), jnp.float32),
+        "down": L.dense_init(ks[6], di, d, dt,
+                             scale=1.0 / np.sqrt(2 * cfg.n_layers * di)),
+    }
+
+
+def mlstm_state_init(cfg: ArchConfig, batch: int):
+    H = cfg.n_heads
+    dh = 2 * cfg.d_model // H
+    return (
+        jnp.zeros((batch, H, dh, dh), jnp.float32),
+        jnp.zeros((batch, H, dh), jnp.float32),
+        jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def mlstm_forward(p: Params, x: jnp.ndarray, cfg: ArchConfig, state=None):
+    """x [B,S,d] -> (y [B,S,d], state)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    di = 2 * d
+    dh = di // H
+    up = x @ p["up"]
+    inner, z = up[..., :di], up[..., di:]
+    q = (inner @ p["wq"]).reshape(B, S, H, dh).astype(jnp.float32) / np.sqrt(dh)
+    k = (inner @ p["wk"]).reshape(B, S, H, dh).astype(jnp.float32) / np.sqrt(dh)
+    v = (inner @ p["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    logi = inner.astype(jnp.float32) @ p["wi"] + p["bi"]  # [B,S,H]
+    logf = jax.nn.log_sigmoid(inner.astype(jnp.float32) @ p["wf"] + p["bf"])
+
+    if state is None:
+        state = mlstm_state_init(cfg, B)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, ft = inp
+        m_new = jnp.maximum(ft + m, it)                     # [B,H]
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(ft + m - m_new)
+        C = f_s[..., None, None] * C + i_s[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])            # [B,H,dk,dv]
+        n = f_s[..., None] * n + i_s[..., None] * kt
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    to_t = lambda a: jnp.moveaxis(a, 1, 0)
+    state, hs = jax.lax.scan(step, state,
+                             (to_t(q), to_t(k), to_t(v), to_t(logi), to_t(logf)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di)            # [B,S,di]
+    h = L.rms_norm({"w": p["norm"]}, h.astype(x.dtype), cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return h @ p["down"], state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    w = jax.random.normal(ks[0], (4, d, d), jnp.float32) / np.sqrt(d)
+    r = jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32) / np.sqrt(dh)
+    return {
+        "w": w.astype(dt),                       # input weights (i, f, z, o)
+        "r": r.astype(jnp.float32),              # block-diag recurrent weights
+        "b": L.zeros((4, d), jnp.float32).at[1].set(3.0),  # forget bias
+        "norm": L.ones((d,), jnp.float32),
+        "out": L.dense_init(ks[2], d, d, dt,
+                            scale=1.0 / np.sqrt(2 * cfg.n_layers * d)),
+    }
+
+
+def slstm_state_init(cfg: ArchConfig, batch: int):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z + 1e-6, z, z - 10.0)  # c, n, h, m
+
+
+def slstm_forward(p: Params, x: jnp.ndarray, cfg: ArchConfig, state=None):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    gates_in = jnp.einsum("bsd,gde->gbse", x, p["w"].astype(x.dtype)) + 0.0
+    gates_in = gates_in.astype(jnp.float32) + p["b"][:, None, None, :]
+    gates_in = gates_in.reshape(4, B, S, H, dh)
+    if state is None:
+        state = slstm_state_init(cfg, B)
+
+    def step(carry, g):
+        c, n, h, m = carry
+        rec = jnp.einsum("ghkl,bhk->gbhl", p["r"], h)  # [4,B,H,dh]
+        gi, gf, gz, go = g + rec
+        m_new = jnp.maximum(jax.nn.log_sigmoid(gf) + m, gi)
+        i_s = jnp.exp(gi - m_new)
+        f_s = jnp.exp(jax.nn.log_sigmoid(gf) + m - m_new)
+        c = f_s * c + i_s * jnp.tanh(gz)
+        n = f_s * n + i_s
+        h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(gates_in, 2, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d)
+    h = L.rms_norm({"w": p["norm"]}, h.astype(x.dtype), cfg.norm_eps)
+    return h @ p["out"], state

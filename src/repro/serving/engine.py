@@ -1,0 +1,167 @@
+"""Batched decode engine with the memory pipeline as a first-class feature.
+
+* builds jitted prefill / decode steps (optionally on separate role meshes —
+  the paper's prefill/decode disaggregation, Fig. 6b),
+* wires the sparse-attention memory pipeline into decode via the placement
+  policy: a traced lax.cond implements the paper's DYNAMIC FALLBACK — dense
+  attention below ``min_context`` and above ``fallback_context``, the fused
+  sparse pipeline in between,
+* supports continuous batching through SlotManager (dense/MoE/VLM/audio
+  families; recurrent-state archs use the simple batched ``generate``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MemoryConfig
+from repro.core import placement
+from repro.core.methods import get_sparse_method
+from repro.models import model as M
+from repro.serving.kv_cache import SlotManager
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 4096
+    n_slots: int = 8
+    method: str = "none"       # none | dsa | seer | lserve
+    tp: int = 16
+    page: int = 16             # dsa micro-page size
+    greedy: bool = True
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, sc: ServeConfig,
+                 key=None, mem: Optional[MemoryConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.mem = mem or cfg.memory.replace(method=sc.method)
+        # the paged pipeline needs the cache length page-aligned
+        gran = max(sc.page, self.mem.block_size,
+                   self.mem.block_size * self.mem.pages_per_physical
+                   if sc.method == "lserve" else 1)
+        if sc.method != "none" and sc.max_len % gran:
+            sc = dataclasses.replace(
+                sc, max_len=((sc.max_len + gran - 1) // gran) * gran)
+        self.sc = sc
+        self.sparse_params = None
+        sparse_fn = None
+        if sc.method != "none" and cfg.family != "ssm":
+            init_fn, mk = get_sparse_method(sc.method)
+            self.sparse_params = init_fn(
+                key if key is not None else jax.random.PRNGKey(0),
+                cfg, self.mem, stacked=cfg.family != "hybrid")
+            kw = {"page": sc.page} if sc.method == "dsa" else {}
+            raw = mk(cfg, self.mem, tp=sc.tp, **kw)
+            mem = self.mem
+
+            def fallback_fn(q, kc, vc, length, sp, k_new=None):
+                """Paper's dynamic fallback as a traced cond."""
+                from repro.models import attention as A
+
+                def dense(_):
+                    return A.attention_decode(q, kc, vc, length, cfg, tp=sc.tp)
+
+                def sparse(_):
+                    return raw(q, kc, vc, length, sp, k_new=k_new)
+
+                use_sparse = ((length >= mem.min_context) &
+                              (length <= mem.fallback_context))
+                return jax.lax.cond(use_sparse, sparse, dense, None)
+
+            sparse_fn = fallback_fn
+        self._sparse_fn = sparse_fn
+
+        self._prefill = jax.jit(
+            lambda p, toks: M.prefill(p, cfg, toks, max_len=sc.max_len,
+                                      tp=sc.tp),
+        )
+        self._decode = jax.jit(
+            lambda p, tok, caches, sp: M.decode_step(
+                p, cfg, tok, caches, tp=sc.tp,
+                sparse_fn=self._sparse_fn,
+                sparse_params=sp),
+        )
+        self.slots = SlotManager(sc.n_slots, sc.max_len)
+        self.caches = None
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
+
+    # ------------------------------------------------------------------
+    # simple batched API
+    # ------------------------------------------------------------------
+
+    def generate(self, prompts: jnp.ndarray, max_new: int) -> np.ndarray:
+        """prompts [B, S] -> generated [B, max_new] (greedy)."""
+        t0 = time.perf_counter()
+        logits, caches = jax.block_until_ready(
+            self._prefill(self.params, prompts))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out = []
+        t0 = time.perf_counter()
+        for _ in range(max_new):
+            out.append(tok)
+            logits, caches = self._decode(self.params, tok, caches,
+                                          self.sparse_params)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        jax.block_until_ready(tok)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["tokens"] += int(prompts.shape[0]) * max_new
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    # ------------------------------------------------------------------
+    # continuous batching (dense-cache families)
+    # ------------------------------------------------------------------
+
+    def _ensure_pool(self):
+        if self.caches is None:
+            self.caches = M.make_cache(self.cfg, self.sc.n_slots,
+                                       self.sc.max_len, tp=self.sc.tp)
+            self._pending = np.zeros((self.sc.n_slots,), np.int32)
+
+    def admit(self, request_id: int, prompt: np.ndarray, max_new: int) -> bool:
+        """Prefill one request into a free slot (insertion into the pool)."""
+        assert self.cfg.family in ("dense", "moe", "audio", "vlm"), \
+            "continuous batching requires dense KV caches"
+        self._ensure_pool()
+        slot = self.slots.admit(request_id, len(prompt), max_new)
+        if slot is None:
+            return False
+        logits, c1 = self._prefill(self.params, jnp.asarray(prompt)[None])
+        S = len(prompt)
+        # splice the single-sequence cache into the pool at `slot`
+        self.caches["k"] = jax.lax.dynamic_update_slice(
+            self.caches["k"], c1["k"], (0, slot, 0, 0, 0))
+        self.caches["v"] = jax.lax.dynamic_update_slice(
+            self.caches["v"], c1["v"], (0, slot, 0, 0, 0))
+        self._pending[slot] = int(jnp.argmax(logits[0]))
+        return True
+
+    def step_pool(self) -> List[Tuple[int, int, int]]:
+        """One decode step for every live slot; returns (request_id, slot,
+        token) emissions. NOTE: the pooled path tracks a shared `length`
+        watermark (max over slots); per-slot masking handles shorter ones."""
+        self._ensure_pool()
+        live = self.slots.live_mask()
+        if not live.any():
+            return []
+        lengths = self.slots.lengths()
+        self.caches = dict(self.caches,
+                           length=jnp.asarray(lengths.max(), jnp.int32))
+        tok = jnp.asarray(self._pending)
+        logits, self.caches = self._decode(self.params, tok, self.caches,
+                                           self.sparse_params)
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        out = []
+        for i in np.flatnonzero(live):
+            rid = self.slots.slots[i].request_id
+            out.append((rid, int(i), int(self._pending[i])))
+            self._pending[i] = nxt[i]
+        self.slots.step(live)
+        return out

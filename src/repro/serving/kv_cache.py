@@ -1,0 +1,59 @@
+"""Slot-based KV cache manager for continuous batching.
+
+The engine owns a fixed pool of ``n_slots`` sequences x ``max_len`` tokens
+(the model-side caches are the dense arrays from models.make_cache, batch dim
+= n_slots). This manager tracks slot liveness, per-slot lengths, admission,
+and release — the host-side bookkeeping that turns a static-shape jitted
+decode step into a continuous-batching server.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Slot:
+    request_id: Optional[int] = None
+    length: int = 0
+    generated: int = 0
+    max_new: int = 0
+    done: bool = True
+
+
+class SlotManager:
+    def __init__(self, n_slots: int, max_len: int):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.slots: List[Slot] = [Slot() for _ in range(n_slots)]
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.done]
+
+    def admit(self, request_id: int, prompt_len: int, max_new: int) -> Optional[int]:
+        free = self.free_slots()
+        if not free or prompt_len + max_new > self.max_len:
+            return None
+        i = free[0]
+        self.slots[i] = Slot(request_id, prompt_len, 0, max_new, False)
+        return i
+
+    def step(self, live_mask: np.ndarray):
+        """Advance all live slots by one generated token."""
+        for i, s in enumerate(self.slots):
+            if not s.done and live_mask[i]:
+                s.length += 1
+                s.generated += 1
+                if s.generated >= s.max_new or s.length >= self.max_len:
+                    s.done = True
+
+    def live_mask(self) -> np.ndarray:
+        return np.asarray([not s.done for s in self.slots])
+
+    def lengths(self) -> np.ndarray:
+        return np.asarray([s.length for s in self.slots], np.int32)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free_slots()) / self.n_slots

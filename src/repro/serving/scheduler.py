@@ -1,0 +1,79 @@
+"""Continuous-batching request scheduler (FCFS with admission control).
+
+The engine's jitted decode step has a static batch (= slot count); the
+scheduler's job is to keep those slots full: admit queued requests into free
+slots (prefill), step the pooled decode, collect completions, and report
+utilization — the serving-side counterpart of the paper's batch-scaling
+study (Table 4).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.engine import Engine
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray
+    max_new: int
+    submitted: float = dataclasses.field(default_factory=time.perf_counter)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    finished: Optional[float] = None
+
+
+class Scheduler:
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self.queue: collections.deque = collections.deque()
+        self.inflight: Dict[int, Request] = {}
+        self.done: Dict[int, Request] = {}
+        self._next_id = 0
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append(Request(rid, np.asarray(prompt), max_new))
+        return rid
+
+    def _admit(self):
+        while self.queue:
+            req = self.queue[0]
+            if not self.engine.admit(req.request_id, req.prompt, req.max_new):
+                break
+            self.queue.popleft()
+            self.inflight[req.request_id] = req
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        """Drain the queue; returns completed requests."""
+        steps = 0
+        while (self.queue or self.inflight) and steps < max_steps:
+            self._admit()
+            emissions = self.engine.step_pool()
+            steps += 1
+            for rid, slot, tok in emissions:
+                req = self.inflight.get(rid)
+                if req is None:
+                    continue
+                req.tokens.append(tok)
+                if len(req.tokens) >= req.max_new:
+                    req.finished = time.perf_counter()
+                    self.done[rid] = req
+                    del self.inflight[rid]
+            if not emissions and not self.queue:
+                break
+        return self.done
+
+    def throughput_tokens_per_s(self) -> float:
+        toks = sum(len(r.tokens) for r in self.done.values())
+        if not self.done:
+            return 0.0
+        t0 = min(r.submitted for r in self.done.values())
+        t1 = max(r.finished for r in self.done.values())
+        return toks / max(t1 - t0, 1e-9)

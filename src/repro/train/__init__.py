@@ -1,0 +1,2 @@
+from repro.train.optimizer import OptConfig, OptState, init_opt_state, adamw_update
+from repro.train.trainer import TrainConfig, Trainer, make_train_step

@@ -1,0 +1,83 @@
+"""AdamW with cosine schedule, global-norm clipping, and fp32 master moments
+over bf16 params (mixed-precision training without optax)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    residual: Any  # gradient-compression error feedback (or None)
+
+
+def init_opt_state(params, compress: str = "none") -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    residual = (jax.tree.map(zeros, params) if compress == "int8" else None)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        residual=residual,
+    )
+
+
+def schedule(oc: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup_steps) /
+                    jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (oc.min_lr_frac + (1 - oc.min_lr_frac) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def adamw_update(grads, state: OptState, params, oc: OptConfig):
+    """Returns (new_params, new_state, stats)."""
+    step = state.step + 1
+    lr = schedule(oc, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / (gnorm + 1e-9))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = oc.b1 * m + (1 - oc.b1) * g
+        v = oc.b2 * v + (1 - oc.b2) * g * g
+        mh = m / (1 - oc.b1 ** step.astype(jnp.float32))
+        vh = v / (1 - oc.b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + oc.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tree.unflatten([o[0] for o in out])
+    new_m = tree.unflatten([o[1] for o in out])
+    new_v = tree.unflatten([o[2] for o in out])
+    stats = {"lr": lr, "grad_norm": gnorm}
+    return new_p, OptState(step, new_m, new_v, state.residual), stats

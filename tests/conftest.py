@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src/ layout import path (tests run with or without PYTHONPATH=src)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see 1 CPU device
+# (DESIGN.md §6). Multi-device tests spawn subprocesses that set the flag.

@@ -1,0 +1,56 @@
+"""Property tests for the in-kernel bitonic sort primitive (hypothesis)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bitonic import bitonic_sort_desc, bitonic_topk
+
+
+@st.composite
+def keys_arrays(draw):
+    log_n = draw(st.integers(1, 9))
+    n = 1 << log_n
+    rows = draw(st.integers(1, 3))
+    # allow_subnormal=False: XLA on CPU flushes denormals to zero, which
+    # would disagree with numpy's total order (not a sort property).
+    vals = draw(st.lists(st.floats(-100, 100, width=32,
+                                   allow_subnormal=False),
+                         min_size=rows * n, max_size=rows * n))
+    arr = np.asarray(vals, np.float32).reshape(rows, n)
+    # quantize to force ties
+    if draw(st.booleans()):
+        arr = np.round(arr)
+    return arr
+
+
+@settings(max_examples=40, deadline=None)
+@given(keys_arrays())
+def test_sort_matches_numpy(keys):
+    rows, n = keys.shape
+    idx = np.broadcast_to(np.arange(n, dtype=np.int32), keys.shape)
+    ks, vs = bitonic_sort_desc(jnp.asarray(keys), jnp.asarray(idx))
+    ks, vs = np.asarray(ks), np.asarray(vs)
+    ref = -np.sort(-keys, axis=-1)
+    assert np.array_equal(ks, ref)
+    # payload is a permutation and consistent with keys
+    assert np.array_equal(np.sort(vs, axis=-1),
+                          np.broadcast_to(np.arange(n), keys.shape))
+    assert np.array_equal(np.take_along_axis(keys, vs, -1), ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(keys_arrays(), st.integers(1, 16))
+def test_topk_subset_of_sort(keys, k):
+    n = keys.shape[-1]
+    k = min(k, n)
+    idx = np.broadcast_to(np.arange(n, dtype=np.int32), keys.shape)
+    kv, ki = bitonic_topk(jnp.asarray(keys), jnp.asarray(idx), k)
+    ref_v = -np.sort(-keys, axis=-1)[..., :k]
+    assert np.array_equal(np.asarray(kv), ref_v)
+
+
+def test_non_power_of_two_rejected():
+    with pytest.raises(AssertionError):
+        bitonic_sort_desc(jnp.zeros((3,)), jnp.zeros((3,), jnp.int32))

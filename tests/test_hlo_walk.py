@@ -1,0 +1,80 @@
+"""Unit tests for the trip-count-aware HLO cost walker — the §Roofline
+numbers stand on this being exact for scan/grad/remat programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_walk
+
+L, N, B = 8, 128, 4
+EXPECT_FWD = L * 2 * B * N * N  # flops of the scanned matmul chain
+
+
+def _chain(remat: bool):
+    def f(ws, x):
+        def body(x, w):
+            fn = (jax.checkpoint(lambda x, w: jnp.tanh(x @ w)) if remat
+                  else (lambda x, w: jnp.tanh(x @ w)))
+            return fn(x, w), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return jnp.sum(x)
+    return f
+
+
+@pytest.fixture(scope="module")
+def arrs():
+    return jnp.zeros((L, N, N), jnp.float32), jnp.zeros((B, N), jnp.float32)
+
+
+def test_fwd_flops_exact(arrs):
+    ws, x = arrs
+    hlo = jax.jit(_chain(False)).lower(ws, x).compile().as_text()
+    assert hlo_walk.walk(hlo).flops == pytest.approx(EXPECT_FWD, rel=1e-6)
+
+
+def test_grad_flops_3x(arrs):
+    ws, x = arrs
+    hlo = jax.jit(jax.grad(_chain(False))).lower(ws, x).compile().as_text()
+    assert hlo_walk.walk(hlo).flops == pytest.approx(3 * EXPECT_FWD, rel=1e-6)
+
+
+def test_remat_grad_flops_4x(arrs):
+    ws, x = arrs
+    hlo = jax.jit(jax.grad(_chain(True))).lower(ws, x).compile().as_text()
+    assert hlo_walk.walk(hlo).flops == pytest.approx(4 * EXPECT_FWD, rel=1e-6)
+
+
+def test_nested_scan_trip_product(arrs):
+    """cost_analysis single-counts nested scans; the walker must multiply."""
+    ws, x = arrs
+    outer = 5
+
+    def f(ws, x):
+        def o(x, _):
+            def body(x, w):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(body, x, ws)
+            return x, None
+        x, _ = jax.lax.scan(o, x, None, length=outer)
+        return x
+
+    hlo = jax.jit(f).lower(ws, x).compile().as_text()
+    assert hlo_walk.walk(hlo).flops == pytest.approx(outer * EXPECT_FWD,
+                                                     rel=1e-6)
+
+
+def test_trip_count_parse():
+    hlo = jax.jit(lambda x: jax.lax.fori_loop(
+        0, 17, lambda i, x: x * 1.5, x)).lower(
+        jnp.zeros((4,))).compile().as_text()
+    comps = hlo_walk.parse_computations(hlo)
+    conds = [hlo_walk._attr_comp(i.rest, "condition")
+             for c in comps.values() for i in c.instrs if i.op == "while"]
+    assert conds and hlo_walk.trip_count(comps[conds[0]]) == 17
+
+
+def test_shape_bytes():
+    assert hlo_walk._spec_bytes("bf16[8,4]{1,0}") == 64
+    assert hlo_walk._spec_bytes("(f32[2,2]{1,0}, s32[3]{0})") == 16 + 12
+    assert hlo_walk._spec_bytes("pred[10]") == 10

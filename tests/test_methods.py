@@ -1,0 +1,114 @@
+"""Application-level methods: RAG (single + two-stage), MemAgent, MaC, TTT."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.core.methods import rag, memagent, mac, ttt
+from repro.data import build_corpus, sample_queries
+from repro.models import init_params, prefill, decode_step
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return build_corpus(512, retrieval_vocab=256, doc_max=32, gen_vocab=512,
+                        embed_dim=16, seed=0)
+
+
+def test_bm25_retrieves_source_doc(corpus):
+    """Queries sampled from a doc's own terms should rank that doc high."""
+    B, T = 4, 8
+    q = sample_queries(corpus, B, T, seed=1)
+    scores, ids = rag.bm25_retrieve(corpus, q, k=16, fused=True)
+    assert ids.shape == (B, 16)
+    assert bool((scores[:, 0] > 0).all())
+    s2, ids2 = rag.bm25_retrieve(corpus, q, k=16, fused=False)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_two_stage_rerank(corpus):
+    B, T = 2, 8
+    q = sample_queries(corpus, B, T, seed=2)
+    q_emb = jnp.ones((B, 16), jnp.float32) / 4.0
+    _, cand = rag.hybrid_retrieve(corpus, q, q_emb, n_first=32)
+    assert cand.shape == (B, 32)
+
+    def score_fn(query_tokens, docs):  # toy cross-encoder: token overlap
+        return (docs.astype(jnp.float32).mean(-1)
+                - jnp.abs(docs.astype(jnp.float32).mean(-1)
+                          - query_tokens.astype(jnp.float32).mean(-1)[:, None]))
+
+    top, ids = rag.rerank(score_fn, corpus, q, cand, k=4)
+    assert ids.shape == (B, 4)
+    # reranked ids are a subset of first-stage candidates
+    for b in range(B):
+        assert set(np.asarray(ids[b]).tolist()) <= set(np.asarray(cand[b]).tolist())
+
+
+def test_append_to_query(corpus):
+    q = jnp.ones((2, 10), jnp.int32)
+    ids = jnp.zeros((2, 3), jnp.int32)
+    out = rag.append_to_query(corpus, q, ids, max_len=64)
+    assert out.shape[1] <= 64
+    assert bool((out[:, -10:] == 1).all())  # query survives at the end
+
+
+def test_dynamic_triggers():
+    logits = jnp.asarray([[10.0, 0.0, 0.0], [0.1, 0.1, 0.1]])
+    f = rag.flare_trigger(logits, tau=0.6)
+    assert not bool(f[0]) and bool(f[1])  # confident vs uncertain
+    d = rag.dragin_trigger(logits, jnp.asarray([1.0, 1.0]), tau=0.9)
+    assert bool(d[1]) and not bool(d[0])
+
+
+def test_memagent_loop():
+    cfg = get_arch("llama3.2-1b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
+    ma = memagent.MemAgentConfig(segment_len=16, mem_len=4, max_answer=4)
+    pf = jax.jit(lambda p, t, ml: prefill(p, cfg, t, max_len=int(ml), tp=4),
+                 static_argnums=(2,))
+    df = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c, tp=4))
+    doc = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    qn = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, cfg.vocab_size)
+    ans = memagent.run_memagent(params, cfg, doc, qn, ma,
+                                prefill_fn=pf, decode_fn=df)
+    assert ans.shape == (2, 4)
+    assert bool((ans >= 0).all())
+
+
+def test_mac_segment_pipeline():
+    cfg = get_arch("llama3.2-1b").smoke()
+    mc = mac.MacConfig(segment_len=16, memory_slots=8, retrieve_k=2)
+    mp = mac.mac_init(jax.random.PRNGKey(0), cfg)
+    bank = mac.bank_init(cfg, mc, batch=2)
+    seg = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    ctx, bank = mac.segment_step(mp, bank, seg, mc)
+    assert ctx.shape == (2, 16 + mc.retrieve_k, cfg.d_model)
+    new_mem = mac.prepare_memory(mp, seg)
+    bank = mac.push(bank, new_mem)
+    assert int(bank["count"]) == 1
+    # retrieval after a push returns finite embeddings
+    ctx2, _ = mac.segment_step(mp, bank, seg, mc)
+    assert bool(jnp.isfinite(ctx2).all())
+    # FIFO: memory_slots+2 pushes keep count clamped
+    for _ in range(mc.memory_slots + 2):
+        bank = mac.push(bank, new_mem)
+    assert int(bank["count"]) == mc.memory_slots
+
+
+def test_ttt_reduces_reconstruction_loss():
+    """The fast-weight update must reduce reconstruction loss within a
+    sequence (that's the definition of test-time training)."""
+    cfg = get_arch("xlstm-125m").smoke()
+    p = ttt.ttt_init(jax.random.PRNGKey(0), cfg, fast_dim=32)
+    B, S = 2, 128
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    W0 = ttt.fast_state_init(cfg, B, fast_dim=32)
+    _, W1 = ttt.ttt_forward(p, x, W0, chunk=32)
+    k = jax.nn.silu(x.astype(jnp.float32) @ p["wk"])
+    v = x.astype(jnp.float32) @ p["wv"]
+    loss0 = float(jnp.mean((jnp.einsum("bsf,bfg->bsg", k, W0) - v) ** 2))
+    loss1 = float(jnp.mean((jnp.einsum("bsf,bfg->bsg", k, W1) - v) ** 2))
+    assert loss1 < loss0

@@ -1,0 +1,94 @@
+"""Sharding-rule properties across ALL 10 archs x both production meshes —
+the static guard behind the 80-cell dry-run matrix: every sharded dimension
+must be divisible by the product of its mesh axes (jit in_shardings reject
+uneven splits)."""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import ARCHS, SHAPES, get_arch
+
+
+class FakeMesh:
+    """Shape-only stand-in so spec generation needs no real devices."""
+
+    def __init__(self, shape_dict):
+        self.shape = shape_dict
+        self.axis_names = tuple(shape_dict)
+
+    @property
+    def devices(self):
+        class _D:
+            size = int(np.prod(list(self.shape.values())))
+        d = _D()
+        return d
+
+
+MESHES = {
+    "16x16": FakeMesh({"data": 16, "model": 16}),
+    "2x16x16": FakeMesh({"pod": 2, "data": 16, "model": 16}),
+}
+
+
+def _check_divisible(structs, specs, mesh, where):
+    flat_s = jax.tree_util.tree_flatten_with_path(structs)[0]
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "index"))
+    from jax.sharding import PartitionSpec
+    flat_p = [p for p in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec))]
+    assert len(flat_s) == len(flat_p), where
+    for (path, leaf), spec in zip(flat_s, flat_p):
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = (names,) if isinstance(names, str) else names
+            ways = int(np.prod([mesh.shape[n] for n in names]))
+            assert leaf.shape[dim] % ways == 0, (
+                where, path, leaf.shape, dim, spec)
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_specs_divisible(arch, mesh_name):
+    from repro.distributed import sharding as sh
+    from repro.launch.specs import param_structs
+
+    cfg = get_arch(arch)
+    mesh = MESHES[mesh_name]
+    structs = param_structs(cfg, tp=mesh.shape["model"])
+    specs = sh.param_specs(structs, cfg, mesh)
+    _check_divisible(structs, specs, mesh, (arch, mesh_name, "params"))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_cache_specs_divisible(arch, shape_name):
+    from repro.distributed import sharding as sh
+    from repro.launch.specs import cache_structs
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind != "decode":
+        pytest.skip("caches only matter for decode shapes")
+    mesh = MESHES["16x16"]
+    structs = cache_structs(cfg, shape.global_batch, shape.seq_len,
+                            tp=mesh.shape["model"])
+    specs = sh.cache_specs(structs, cfg, shape, mesh)
+    _check_divisible(structs, specs, mesh, (arch, shape_name, "caches"))
+
+
+def test_fsdp_threshold():
+    from repro.distributed import sharding as sh
+    from repro.launch.specs import param_structs
+    from jax.sharding import PartitionSpec
+
+    mesh = MESHES["16x16"]
+    big = get_arch("qwen2-vl-72b")
+    small = get_arch("llama3.2-1b")
+    specs_big = sh.param_specs(param_structs(big, 16), big, mesh)
+    specs_small = sh.param_specs(param_structs(small, 16), small, mesh)
+    has_data = lambda specs: any(
+        "data" in str(s) for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, PartitionSpec)))
+    assert has_data(specs_big)        # 72B: FSDP engaged
+    assert not has_data(specs_small)  # 1.5B: TP only
