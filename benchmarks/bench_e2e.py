@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_cfg, row, timeit
+from benchmarks.common import bench_cfg, pick, row, timeit
 from repro.core.methods import get_sparse_method, mac
 from repro.models import init_params, prefill, decode_step
 
@@ -22,7 +22,7 @@ def run():
     key = jax.random.PRNGKey(0)
     params = init_params(cfg, key, tp=4)
 
-    for S in (512, 2048, 4096):
+    for S in pick((512, 2048, 4096), (256,)):
         toks = jax.random.randint(key, (2, S), 0, cfg.vocab_size)
         _, caches = jax.jit(lambda p, t: prefill(p, cfg, t, max_len=S, tp=4))(
             params, toks)
@@ -42,7 +42,8 @@ def run():
     # Fig 11: MaC — top-k retrieval pipeline vs attending the FULL memory
     # bank (no retrieval): the pipeline shrinks the backbone's context from
     # memory_slots to retrieve_k extra positions.
-    mc = mac.MacConfig(segment_len=256, memory_slots=64, retrieve_k=4)
+    mc = mac.MacConfig(segment_len=pick(256, 64),
+                       memory_slots=pick(64, 16), retrieve_k=4)
     mp = mac.mac_init(key, cfg)
     bank = mac.bank_init(cfg, mc, batch=2)
     for _ in range(mc.memory_slots):
@@ -71,15 +72,17 @@ def run():
                     f"speedup_vs_full_bank={t_full / t_ret:.2f}"))
 
     # Fig 12: MemAgent prefill vs decode time per segment (role split)
-    seg_toks = jax.random.randint(key, (2, 256), 0, cfg.vocab_size)
-    pf = jax.jit(lambda p, t: prefill(p, cfg, t, max_len=288, tp=4))
+    seg = pick(256, 64)
+    n_dec = pick(32, 8)
+    seg_toks = jax.random.randint(key, (2, seg), 0, cfg.vocab_size)
+    pf = jax.jit(lambda p, t: prefill(p, cfg, t, max_len=seg + 32, tp=4))
     t_prefill = timeit(pf, params, seg_toks)
     _, c0 = pf(params, seg_toks)
     dec = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c, tp=4))
 
     def decode32(p, c):
         tok = jnp.zeros((2,), jnp.int32)
-        for _ in range(32):
+        for _ in range(n_dec):
             logits, c = dec(p, tok, c)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
         return tok

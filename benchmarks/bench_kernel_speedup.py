@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import pick, row, timeit
 from repro.kernels import ops, ref
 
 
@@ -21,7 +21,7 @@ def run():
     rng = np.random.default_rng(0)
     B, Hq, dk, k = 1, 64, 128, 2048
 
-    for S in (8192, 65536):
+    for S in pick((8192, 65536), (2048,)):
         q = jnp.asarray(rng.standard_normal((B, Hq, dk)), jnp.bfloat16)
         keys = jnp.asarray(rng.standard_normal((B, S, dk)), jnp.bfloat16)
         w = jnp.abs(jnp.asarray(rng.standard_normal((B, Hq)), jnp.float32))
@@ -44,7 +44,7 @@ def run():
                         f"speedup={unfused_bytes / fused_bytes:.2f}"))
 
     # BM25 (Fig. 10 right): fused vs unfused over the doc panel
-    D, T, kk = 16384, 16, 64
+    D, T, kk = pick(16384, 2048), 16, 64
     tf = jnp.asarray(rng.poisson(1.0, (1, D, T)), jnp.float32)
     dl = jnp.asarray(rng.integers(20, 200, (1, D)), jnp.float32)
     idf = jnp.asarray(rng.random((1, T)), jnp.float32)

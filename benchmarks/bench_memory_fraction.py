@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_cfg, row, timeit
+from benchmarks.common import bench_cfg, pick, row, timeit
 from repro.core import placement
 from repro.core.methods import dsa, get_sparse_method
 from repro.core.pipeline import StageProfiler
@@ -31,7 +31,7 @@ def run():
     mem = cfg.memory
     page = 16
     n_sel = max(mem.top_k // page, 1)
-    for S in (512, 2048):
+    for S in pick((512, 2048), (256,)):
         toks = jax.random.randint(key, (2, S), 0, cfg.vocab_size)
         _, caches = jax.jit(lambda p, t: prefill(p, cfg, t, max_len=S, tp=4))(
             params, toks)

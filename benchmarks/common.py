@@ -9,9 +9,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# --smoke mode (benchmarks/run.py --smoke, exercised in CI): tiny shapes and
+# single iterations so the benchmark code paths stay executable without the
+# full measurement cost. Numbers produced under smoke are NOT comparable.
+_SMOKE = {"on": False}
+
+
+def set_smoke(flag: bool) -> None:
+    _SMOKE["on"] = bool(flag)
+
+
+def is_smoke() -> bool:
+    return _SMOKE["on"]
+
+
+def pick(full, smoke):
+    """Select the full-run or smoke-run variant of a benchmark parameter."""
+    return smoke if _SMOKE["on"] else full
+
 
 def timeit(fn, *args, warmup=2, iters=5):
     """Median wall time of fn(*args) in seconds (block_until_ready)."""
+    if _SMOKE["on"]:
+        warmup, iters = min(warmup, 1), 1
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []

@@ -1,9 +1,19 @@
 """Benchmark orchestrator — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows (stdout)."""
+Prints ``name,us_per_call,derived`` CSV rows (stdout).
+
+``--smoke``: tiny configs and single iterations (run in CI so benchmark code
+can't silently rot). Smoke numbers are execution proofs, not measurements.
+"""
+import argparse
+import os
 import sys
 import time
 import traceback
 
+# allow both `python benchmarks/run.py` and `python -m benchmarks.run`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import common
 from benchmarks import (bench_memory_fraction, bench_kernel_speedup,
                         bench_e2e, bench_energy, bench_batch_scaling,
                         bench_comm_bytes)
@@ -19,6 +29,11 @@ BENCHES = [
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs, 1 iteration (CI execution check)")
+    args = ap.parse_args()
+    common.set_smoke(args.smoke)
     print("name,us_per_call,derived")
     failures = 0
     for label, mod in BENCHES:

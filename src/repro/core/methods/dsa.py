@@ -101,11 +101,11 @@ def make_sparse_fn(cfg: ArchConfig, mem: MemoryConfig, *, tp: int = 16,
         vals, pidx = ops.relevancy_topk(
             q_idx, kp, w, n_pages_sel,
             block=max(min(4096, S // page), n_pages_sel))
-        # mask pages beyond the live context
-        live = pidx * page < length
+        # mask pages beyond the live context (length is [] or per-slot [B])
+        lb = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+        live = pidx * page < lb[:, None]
         pidx = jnp.where(live, pidx, -1)
         # --- apply: paged sparse attention over retrieved pages ---
-        lb = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
         out, _ = ops.paged_decode_attention(
             strip_dead_heads(q, cfg), kc, vc, pidx.astype(jnp.int32), lb,
             page_size=page)
@@ -133,9 +133,9 @@ def make_sparse_fn_distributed(cfg: ArchConfig, mem: MemoryConfig, mesh, *,
         vals, pidx = distributed_relevancy_topk(
             q_idx, kp, w, n_pages_sel, mesh, axis, block=2048,
             batch_axis=batch_axis)
-        live = pidx * page < length
-        pidx = jnp.where(live, pidx, -1)
         lb = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+        live = pidx * page < lb[:, None]
+        pidx = jnp.where(live, pidx, -1)
         out = distributed_sparse_decode(
             strip_dead_heads(q, cfg), kc, vc, pidx.astype(jnp.int32), lb,
             mesh, axis, page_size=page, batch_axis=batch_axis)

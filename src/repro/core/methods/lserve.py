@@ -58,9 +58,9 @@ def make_sparse_fn(cfg: ArchConfig, mem: MemoryConfig, *, tp: int = 16):
         # expand to logical pages
         logical = (phys[..., None] * ppp +
                    jnp.arange(ppp)[None, None, :]).reshape(B, -1)
-        live = (logical * ps < length) & (logical < S // ps)
-        logical = jnp.where(live, logical, -1)
         lb = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+        live = (logical * ps < lb[:, None]) & (logical < S // ps)
+        logical = jnp.where(live, logical, -1)
         from repro.core.methods.dsa import strip_dead_heads, repad_dead_heads
         out, _ = ops.paged_decode_attention(
             strip_dead_heads(q, cfg), kc, vc, logical.astype(jnp.int32), lb,

@@ -59,13 +59,13 @@ def make_sparse_fn(cfg: ArchConfig, mem: MemoryConfig, *, tp: int = 16):
         # fused relevancy + retrieve (top-k blocks)
         vals, bidx = ops.relevancy_topk(
             q_gate, k_blk, w, n_sel, block=max(min(4096, S // bs), n_sel))
-        live = bidx * bs < length
+        lb = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+        live = bidx * bs < lb[:, None]
         if mem.selection == "threshold":
             # normalize: block softmax over selected candidates, drop < tau
             probs = jax.nn.softmax(vals, axis=-1)
             live &= probs >= mem.threshold
         bidx = jnp.where(live, bidx, -1)
-        lb = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
         from repro.core.methods.dsa import strip_dead_heads, repad_dead_heads
         out, _ = ops.paged_decode_attention(
             strip_dead_heads(q, cfg), kc, vc, bidx.astype(jnp.int32), lb,

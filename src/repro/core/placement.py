@@ -105,6 +105,21 @@ def choose_path(cfg: ArchConfig, mem: MemoryConfig, context: int,
     return "sparse" if sparse_s < dense_s else "dense"
 
 
+def traced_use_sparse(length, mem: MemoryConfig):
+    """Traced form of the dynamic fallback window for jitted decode.
+
+    ``length`` is a scalar (per-request decode) or a per-slot vector (pooled
+    decode). A jitted lax.cond is batch-level, so the pooled predicate is
+    decided on the max over slots — the branch itself still masks per slot.
+    Returns a traced bool: take the sparse pipeline iff the (max) context
+    sits inside [min_context, fallback_context].
+    """
+    import jax.numpy as jnp
+
+    lmax = jnp.max(jnp.asarray(length))
+    return (lmax >= mem.min_context) & (lmax <= mem.fallback_context)
+
+
 # Paper Table 2 (orders of magnitude of arithmetic intensity), used by
 # benchmarks to validate our measured intensities land in the right decade.
 PAPER_TABLE2 = {

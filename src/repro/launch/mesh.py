@@ -1,25 +1,52 @@
-"""Production mesh construction.
+"""Production mesh construction (version-portable).
 
 A FUNCTION (not a module-level constant) so importing this module never
 touches jax device state — the dry-run must set XLA_FLAGS before any jax
 initialization.
+
+``jax.sharding.AxisType`` / explicit ``axis_types`` only exist in newer JAX;
+on older releases every mesh axis is implicitly Auto, so the guarded kwargs
+degrade to a plain ``jax.make_mesh``/``Mesh`` call. ``use_mesh`` papers over
+the ``jax.set_mesh`` (new) vs ``with mesh:`` (old) context difference the
+same way. Tests that spawn multi-device subprocesses import these helpers
+instead of touching ``AxisType`` directly.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # JAX >= 0.5-era explicit axis types
+    from jax.sharding import AxisType
+
+    def _auto_kwargs(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:  # older JAX: all axes are Auto already
+    AxisType = None
+
+    def _auto_kwargs(n_axes: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_auto_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes) -> Mesh:
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+                         **_auto_kwargs(len(axes)))
+
+
+def use_mesh(mesh: Mesh):
+    """Context manager that activates ``mesh`` for jitted computations:
+    ``jax.set_mesh`` where it exists, the classic ``with mesh:`` otherwise."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return contextlib.nullcontext() if mesh is None else mesh
 
 
 def split_mesh_roles(mesh: Mesh, prefill_fraction: float = 0.5):
@@ -34,8 +61,6 @@ def split_mesh_roles(mesh: Mesh, prefill_fraction: float = 0.5):
     sl_dec = [slice(None)] * devices.ndim
     sl_pre[d_idx] = slice(0, cut)
     sl_dec[d_idx] = slice(cut, n_data)
-    pre = Mesh(devices[tuple(sl_pre)], axes,
-               axis_types=(AxisType.Auto,) * len(axes))
-    dec = Mesh(devices[tuple(sl_dec)], axes,
-               axis_types=(AxisType.Auto,) * len(axes))
+    pre = Mesh(devices[tuple(sl_pre)], axes, **_auto_kwargs(len(axes)))
+    dec = Mesh(devices[tuple(sl_dec)], axes, **_auto_kwargs(len(axes)))
     return pre, dec

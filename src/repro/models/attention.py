@@ -190,3 +190,41 @@ def attention_decode(
     p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p, vexp.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def attention_decode_chunk(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    start: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    window: Optional[int] = None,
+    tp: int = 16,
+) -> jnp.ndarray:
+    """Chunked-prefill attention: C new query tokens vs an in-place cache.
+
+    q [B,C,Hp,hd]; caches [B,Smax,KV,hd] (the C new keys are already written
+    at positions start[b]..start[b]+C-1); start [B] -> [B,C,Hp,hd]. Query i
+    of row b sits at position start[b]+i and attends causally to everything
+    at or before it. Padding queries (beyond a row's real span) just produce
+    garbage rows the caller ignores.
+    """
+    B, C = q.shape[:2]
+    Smax = k_cache.shape[1]
+    hd = q.shape[-1]
+    window = window if window is not None else (cfg.sliding_window or None)
+    kexp = expand_kv(k_cache, cfg, tp)
+    vexp = expand_kv(v_cache, cfg, tp)
+    scale = 1.0 / np.sqrt(hd)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                    kexp.astype(jnp.float32))          # [B,Hp,C,Smax]
+    kpos = jnp.arange(Smax)
+    qpos = start[:, None] + jnp.arange(C)[None, :]     # [B, C]
+    mask = kpos[None, None, :] <= qpos[:, :, None]     # [B, C, Smax]
+    if window:
+        mask &= kpos[None, None, :] > (qpos[:, :, None] - window)
+    sc = jnp.where(mask[:, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vexp.astype(jnp.float32))
+    return out.astype(q.dtype)

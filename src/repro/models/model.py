@@ -436,6 +436,161 @@ def decode_step(params, cfg: ArchConfig, token, caches, *, tp: int = 16,
     return last_logits(params, cfg, x), caches
 
 
+# ---------------------------------------------------------------------------
+# Paged continuous-batching decode (serving): per-slot lengths + page pool
+# ---------------------------------------------------------------------------
+
+
+def make_page_pool(cfg: ArchConfig, n_slots: int, max_len: int, *,
+                   page_size: int, total_pages: int, tp: int = 16,
+                   dtype=None) -> Dict:
+    """Device-side paged KV pool for transformer families.
+
+    Physical page 0 is reserved as the zero/trash page: every unallocated
+    page-table entry points at it, dead-slot writes are routed (zeroed) to
+    it, and it must stay zero so pooled decode equals per-request decode.
+    """
+    dt = dtype or L.dtype_of(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    assert max_len % page_size == 0, (max_len, page_size)
+    return {
+        "k_pages": jnp.zeros((cfg.n_layers, total_pages, page_size, kv, hd), dt),
+        "v_pages": jnp.zeros((cfg.n_layers, total_pages, page_size, kv, hd), dt),
+        "page_table": jnp.zeros((n_slots, max_len // page_size), jnp.int32),
+        "lengths": jnp.zeros((n_slots,), jnp.int32),
+    }
+
+
+def decode_step_paged(params, cfg: ArchConfig, token, pool, live, *,
+                      tp: int = 16, sparse_fn=None, sparse_params=None,
+                      positions3=None):
+    """One decode step over the paged pool with PER-SLOT lengths.
+
+    token [B] int32; pool from ``make_page_pool`` (lengths [B] must be
+    pre-masked to 0 for dead slots); live [B] bool. Each slot gets its own
+    RoPE position, its own cache-write offset, and its own attention mask —
+    no slot pays for the longest sequence's watermark, and the sparse-method
+    fallback cond sees the true max over live slots instead of a shared
+    scalar. Returns (logits [B, V], pool') with pages updated in place and
+    live lengths advanced by one.
+    """
+    from repro.kernels.page_pool import pool_gather, pool_scatter_token
+
+    B = token.shape[0]
+    lengths = pool["lengths"]
+    table = pool["page_table"]
+    live = live.astype(bool)
+    x = L.embed(params["embed"], token[:, None])
+    positions = lengths[:, None]                           # [B, 1] per-slot
+    if cfg.rope_style == "mrope" and positions3 is None:
+        positions3 = jnp.broadcast_to(lengths[None, :, None], (3, B, 1))
+    cos, sin = _rope_tables(cfg, positions, positions3)
+
+    def layer_fn(x, lp_kv):
+        lp, kp, vp, sp = lp_kv
+        h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k, v = A.project_qkv(lp["attn"], h, cos, sin, cfg, tp)
+        kp = pool_scatter_token(kp, table, lengths, k[:, 0], live)
+        vp = pool_scatter_token(vp, table, lengths, v[:, 0], live)
+        kc = pool_gather(kp, table)
+        vc = pool_gather(vp, table)
+        if sparse_fn is not None:
+            res = sparse_fn(q, kc, vc, lengths + 1, sp, k_new=k)
+            attn = res[0] if isinstance(res, tuple) else res
+        else:
+            attn = A.attention_decode(q, kc, vc, lengths + 1, cfg, tp=tp)
+        x = x + _attn_out(lp["attn"], attn, cfg, tp)
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = M.moe_apply(lp["moe"], h, cfg)
+        else:
+            y = L.mlp(lp["mlp"], h)
+        return x + y, (kp, vp)
+
+    sp_stack = sparse_params
+    if sp_stack is None:
+        sp_stack = jnp.zeros((cfg.n_layers,), jnp.int32)   # dummy scan leaf
+    x, (k_new, v_new) = jax.lax.scan(
+        layer_fn, x, (params["layers"], pool["k_pages"], pool["v_pages"],
+                      sp_stack))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    pool = dict(pool, k_pages=k_new, v_pages=v_new,
+                lengths=lengths + live.astype(jnp.int32))
+    return last_logits(params, cfg, x), pool
+
+
+def extend_paged(params, cfg: ArchConfig, tokens, pool, n_valid, *,
+                 tp: int = 16):
+    """Chunked prefill: append a span of C tokens per slot to the paged pool.
+
+    tokens [B, C] int32 (rows padded past ``n_valid[b]``); pool from
+    ``make_page_pool``; n_valid [B] int32 (0 = slot not prefilling this
+    step). Queries attend causally to the existing prefix plus the chunk.
+    Returns (logits [B, V] at each row's last valid token, pool') —
+    ``decode_step_paged`` is the C=1 specialization of this, kept separate
+    so the decode path can thread the sparse-method fallback.
+    """
+    from repro.kernels.page_pool import pool_gather, pool_scatter_span
+
+    B, C = tokens.shape
+    lengths = pool["lengths"]
+    table = pool["page_table"]
+    x = L.embed(params["embed"], tokens)
+    positions = lengths[:, None] + jnp.arange(C)[None, :]  # [B, C]
+    positions3 = None
+    if cfg.rope_style == "mrope":
+        positions3 = jnp.broadcast_to(positions[None], (3, B, C))
+    cos, sin = _rope_tables(cfg, positions, positions3)
+
+    def layer_fn(x, lp_kv):
+        lp, kp, vp = lp_kv
+        h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k, v = A.project_qkv(lp["attn"], h, cos, sin, cfg, tp)
+        kp = pool_scatter_span(kp, table, lengths, k, n_valid)
+        vp = pool_scatter_span(vp, table, lengths, v, n_valid)
+        kc = pool_gather(kp, table)
+        vc = pool_gather(vp, table)
+        attn = A.attention_decode_chunk(q, kc, vc, lengths, cfg, tp=tp)
+        x = x + _attn_out(lp["attn"], attn, cfg, tp)
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = M.moe_apply(lp["moe"], h, cfg)
+        else:
+            y = L.mlp(lp["mlp"], h)
+        return x + y, (kp, vp)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        layer_fn, x, (params["layers"], pool["k_pages"], pool["v_pages"]))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    last = jnp.clip(n_valid - 1, 0, C - 1)
+    xg = jnp.take_along_axis(x, last[:, None, None], axis=1)   # [B, 1, d]
+    logits = L.lm_head(params["lm_head"], xg, cfg)[:, 0]
+    pool = dict(pool, k_pages=k_new, v_pages=v_new, lengths=lengths + n_valid)
+    return logits, pool
+
+
+def prefill_bucketed(params, cfg: ArchConfig, tokens, true_lens, *,
+                     tp: int = 16):
+    """Batched admission prefill over a length bucket.
+
+    tokens [B, Sb] right-padded prompts; true_lens [B] real lengths.
+    Returns (logits [B, V] at each row's last REAL token, k, v) where
+    k/v [L, B, Sb, KV, hd] are zero-masked past ``true_lens`` so splicing
+    them into the page pool leaves the dead region exactly zero (page-level
+    relevancy scores must see the same zeros a per-request cache has).
+    """
+    B, Sb = tokens.shape
+    x, _, caches = forward(params, cfg, tokens, collect_cache=True, tp=tp)
+    last = jnp.clip(true_lens - 1, 0, Sb - 1)
+    xg = jnp.take_along_axis(x, last[:, None, None], axis=1)
+    logits = L.lm_head(params["lm_head"], xg, cfg)[:, 0]
+    mask = (jnp.arange(Sb)[None, :] < true_lens[:, None])      # [B, Sb]
+    m = mask[None, :, :, None, None]
+    k = caches["k"] * m.astype(caches["k"].dtype)
+    v = caches["v"] * m.astype(caches["v"].dtype)
+    return logits, k, v
+
+
 def _hybrid_decode(params, cfg, x, cos, sin, caches, tp, sparse_fn,
                    sparse_params=None):
     length = caches["length"]

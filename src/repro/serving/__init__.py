@@ -1,3 +1,3 @@
 from repro.serving.engine import Engine, ServeConfig
 from repro.serving.scheduler import Scheduler, Request
-from repro.serving.kv_cache import SlotManager
+from repro.serving.kv_cache import SlotManager, PagedKVPool

@@ -5,13 +5,22 @@
 * wires the sparse-attention memory pipeline into decode via the placement
   policy: a traced lax.cond implements the paper's DYNAMIC FALLBACK — dense
   attention below ``min_context`` and above ``fallback_context``, the fused
-  sparse pipeline in between,
-* supports continuous batching through SlotManager (dense/MoE/VLM/audio
-  families; recurrent-state archs use the simple batched ``generate``).
+  sparse pipeline in between (for pooled decode the cond is decided on the
+  max length over live slots; masks inside the branch stay per-slot),
+* continuous batching runs on a PAGED KV pool with PER-SLOT lengths: slots
+  allocate/free fixed-size pages at admit/release (HBM scales with live
+  tokens, not ``n_slots * max_len``), every slot decodes at its own RoPE
+  position / cache offset / attention mask, admission prefill is batched
+  over length buckets with a small set of pre-jitted shapes, and long
+  prompts prefill in fixed-size chunks interleaved with decode steps,
+* the legacy dense ``n_slots x max_len`` pool with the shared
+  ``lengths.max()`` watermark is kept behind ``ServeConfig(paged=False)`` as
+  the benchmark baseline (bench_batch_scaling old-vs-new comparison).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -23,7 +32,13 @@ from repro.configs.base import ArchConfig, MemoryConfig
 from repro.core import placement
 from repro.core.methods import get_sparse_method
 from repro.models import model as M
-from repro.serving.kv_cache import SlotManager
+from repro.serving.kv_cache import PagedKVPool, SlotManager
+
+POOL_FAMILIES = ("dense", "moe", "audio", "vlm")
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
 
 
 @dataclasses.dataclass
@@ -34,6 +49,14 @@ class ServeConfig:
     tp: int = 16
     page: int = 16             # dsa micro-page size
     greedy: bool = True
+    # --- paged continuous batching ---
+    paged: bool = True         # False = legacy dense pool + shared watermark
+    kv_page_size: int = 16     # physical KV page (pool granule)
+    pool_pages: int = 0        # 0 = full backing; else arena size (oversubscribe)
+    prefill_chunk: int = 128   # chunk span for chunked prefill
+    chunk_threshold: int = 512 # prompts longer than this prefill in chunks
+    view_buckets: bool = True  # size the decode view by max live length
+                               # (pow2-bucketed) instead of max_len
 
 
 class Engine:
@@ -42,14 +65,19 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.mem = mem or cfg.memory.replace(method=sc.method)
-        # the paged pipeline needs the cache length page-aligned
+        # the paged pipeline needs the cache length page-aligned; the paged
+        # pool additionally needs it kv-page aligned
         gran = max(sc.page, self.mem.block_size,
                    self.mem.block_size * self.mem.pages_per_physical
                    if sc.method == "lserve" else 1)
-        if sc.method != "none" and sc.max_len % gran:
+        if sc.method == "none":
+            gran = 1
+        gran = math.lcm(gran, sc.kv_page_size if sc.paged else 1)
+        if sc.max_len % gran:
             sc = dataclasses.replace(
                 sc, max_len=((sc.max_len + gran - 1) // gran) * gran)
         self.sc = sc
+        self._gran = gran
         self.sparse_params = None
         sparse_fn = None
         if sc.method != "none" and cfg.family != "ssm":
@@ -62,7 +90,13 @@ class Engine:
             mem = self.mem
 
             def fallback_fn(q, kc, vc, length, sp, k_new=None):
-                """Paper's dynamic fallback as a traced cond."""
+                """Paper's dynamic fallback as a traced cond.
+
+                ``length`` is a scalar (per-request decode) or a per-slot
+                vector (pooled decode); the cond predicate is batch-level
+                (max over slots — a jitted cond cannot branch per row), the
+                branch itself masks per slot.
+                """
                 from repro.models import attention as A
 
                 def dense(_):
@@ -71,8 +105,7 @@ class Engine:
                 def sparse(_):
                     return raw(q, kc, vc, length, sp, k_new=k_new)
 
-                use_sparse = ((length >= mem.min_context) &
-                              (length <= mem.fallback_context))
+                use_sparse = placement.traced_use_sparse(length, mem)
                 return jax.lax.cond(use_sparse, sparse, dense, None)
 
             sparse_fn = fallback_fn
@@ -88,8 +121,30 @@ class Engine:
                 sparse_fn=self._sparse_fn,
                 sparse_params=sp),
         )
+        # pooled-path jits (built lazily; bucket/chunk shapes cached by key).
+        # k_pages/v_pages are DONATED: the engine replaces its references
+        # with the outputs right after each call, so XLA may update the pool
+        # in place instead of copying the whole arena every token (on CPU
+        # donation is a no-op warning; on TPU it is the difference between
+        # O(touched pages) and O(pool) per-step HBM traffic).
+        self._decode_paged = jax.jit(
+            lambda p, tok, kp, vp, table, lengths, live, sp:
+            M.decode_step_paged(
+                p, cfg, tok,
+                {"k_pages": kp, "v_pages": vp, "page_table": table,
+                 "lengths": lengths},
+                live, tp=sc.tp,
+                sparse_fn=self._sparse_fn, sparse_params=sp),
+            donate_argnums=(2, 3))
+        self._bucket_fns: Dict[Tuple[int, int], callable] = {}
+        self._extend_fns: Dict[int, callable] = {}
+        self._splice_fns: Dict[Tuple[int, int], callable] = {}
+
         self.slots = SlotManager(sc.n_slots, sc.max_len)
-        self.caches = None
+        self.pool: Optional[PagedKVPool] = None
+        self.caches = None            # legacy dense pool
+        # chunked-prefill state: slot -> [request_id, prompt np, next_pos]
+        self._chunks: Dict[int, list] = {}
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
 
     # ------------------------------------------------------------------
@@ -120,14 +175,114 @@ class Engine:
     # ------------------------------------------------------------------
 
     def _ensure_pool(self):
-        if self.caches is None:
+        if self.sc.paged:
+            if self.pool is None:
+                assert self.cfg.family in POOL_FAMILIES, \
+                    "continuous batching requires dense KV caches"
+                self.pool = PagedKVPool(
+                    self.cfg, self.sc.n_slots, self.sc.max_len,
+                    page_size=self.sc.kv_page_size,
+                    total_pages=self.sc.pool_pages, tp=self.sc.tp)
+                self._pending = np.zeros((self.sc.n_slots,), np.int32)
+        elif self.caches is None:
+            assert self.cfg.family in POOL_FAMILIES, \
+                "continuous batching requires dense KV caches"
             self.caches = M.make_cache(self.cfg, self.sc.n_slots,
                                        self.sc.max_len, tp=self.sc.tp)
             self._pending = np.zeros((self.sc.n_slots,), np.int32)
 
+    # -- admission (batched, length-bucketed prefill) -------------------
+
+    def _bucket_len(self, prompt_len: int) -> int:
+        ps = self.sc.kv_page_size
+        b = _next_pow2(max(prompt_len, ps))
+        b = ((b + ps - 1) // ps) * ps
+        return min(b, self.sc.max_len)
+
+    def _get_bucket_fn(self, B: int, Sb: int):
+        key = (B, Sb)
+        if key not in self._bucket_fns:
+            cfg, sc = self.cfg, self.sc
+            self._bucket_fns[key] = jax.jit(
+                lambda p, toks, lens: M.prefill_bucketed(p, cfg, toks, lens,
+                                                         tp=sc.tp))
+        return self._bucket_fns[key]
+
+    def _get_splice_fn(self, B: int, n_pages: int):
+        key = (B, n_pages)
+        if key not in self._splice_fns:
+            ps = self.sc.kv_page_size
+
+            def splice(kp, vp, k, v, dest):
+                # k/v [L, B, Sb, KV, hd] -> pages [L, B*n_pages, ps, KV, hd]
+                Lc, Bc = k.shape[0], k.shape[1]
+                kpg = k.reshape(Lc, Bc * n_pages, ps, *k.shape[3:])
+                vpg = v.reshape(Lc, Bc * n_pages, ps, *v.shape[3:])
+                flat = dest.reshape(-1)
+                return kp.at[:, flat].set(kpg), vp.at[:, flat].set(vpg)
+
+            self._splice_fns[key] = jax.jit(splice, donate_argnums=(0, 1))
+        return self._splice_fns[key]
+
+    def admit_many(self, requests: List[Tuple[int, np.ndarray, int]]
+                   ) -> List[bool]:
+        """Admit a batch of (request_id, prompt, max_new): one bucketed
+        prefill per distinct bucket length instead of one per request."""
+        self._ensure_pool()
+        if not self.sc.paged:
+            return [self.admit(rid, p, mn) for rid, p, mn in requests]
+        admitted: Dict[int, List] = {}   # bucket_len -> [(slot, prompt)]
+        ok: List[bool] = []
+        for rid, prompt, max_new in requests:
+            prompt = np.asarray(prompt)
+            total = len(prompt) + max_new
+            if total > self.sc.max_len or not self.pool.can_alloc(total):
+                ok.append(False)
+                break                    # FCFS: don't let later requests
+            slot = self.slots.admit(rid, len(prompt), max_new)
+            if slot is None:             # jump a rejected head (starvation)
+                ok.append(False)
+                break
+            assert self.pool.alloc(slot, total)
+            admitted.setdefault(self._bucket_len(len(prompt)), []).append(
+                (slot, prompt))
+            ok.append(True)
+        ok.extend([False] * (len(requests) - len(ok)))
+        t0 = time.perf_counter()
+        for Sb, group in admitted.items():
+            self._prefill_bucket(Sb, group)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        return ok
+
+    def _prefill_bucket(self, Sb: int, group: List[Tuple[int, np.ndarray]]):
+        """One jitted prefill over a length bucket + one page splice."""
+        ps = self.sc.kv_page_size
+        B = len(group)
+        toks = np.zeros((B, Sb), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, (_, prompt) in enumerate(group):
+            toks[i, : len(prompt)] = prompt
+            lens[i] = len(prompt)
+        logits, k, v = self._get_bucket_fn(B, Sb)(
+            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        n_pages = Sb // ps
+        dest = np.zeros((B, n_pages), np.int32)
+        for i, (slot, _) in enumerate(group):
+            dest[i] = self.pool.table[slot, :n_pages]
+        kp, vp = self._get_splice_fn(B, n_pages)(
+            self.pool.device["k_pages"], self.pool.device["v_pages"],
+            k, v, jnp.asarray(dest))
+        self.pool.device["k_pages"], self.pool.device["v_pages"] = kp, vp
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for i, (slot, _) in enumerate(group):
+            self._pending[slot] = nxt[i]
+
     def admit(self, request_id: int, prompt: np.ndarray, max_new: int) -> bool:
         """Prefill one request into a free slot (insertion into the pool)."""
-        assert self.cfg.family in ("dense", "moe", "audio", "vlm"), \
+        if self.sc.paged:
+            return self.admit_many([(request_id, np.asarray(prompt),
+                                     max_new)])[0]
+        assert self.cfg.family in POOL_FAMILIES, \
             "continuous batching requires dense KV caches"
         self._ensure_pool()
         slot = self.slots.admit(request_id, len(prompt), max_new)
@@ -143,11 +298,146 @@ class Engine:
         self._pending[slot] = int(jnp.argmax(logits[0]))
         return True
 
+    # -- chunked prefill (long prompts, interleaved with decode) --------
+
+    def admit_chunked(self, request_id: int, prompt: np.ndarray,
+                      max_new: int) -> bool:
+        """Allocate slot + pages now; the prompt itself is prefilled in
+        ``prefill_chunk``-sized spans by ``prefill_step`` so long prompts
+        don't stall the decode pool."""
+        assert self.sc.paged, "chunked prefill needs the paged pool"
+        self._ensure_pool()
+        prompt = np.asarray(prompt)
+        total = len(prompt) + max_new
+        if total > self.sc.max_len or not self.pool.can_alloc(total):
+            return False
+        slot = self.slots.admit(request_id, len(prompt), max_new)
+        if slot is None:
+            return False
+        assert self.pool.alloc(slot, total)
+        self.slots.slots[slot].length = 0      # grows as chunks land
+        self._chunks[slot] = [request_id, prompt, 0]
+        return True
+
+    def has_prefill_work(self) -> bool:
+        return bool(self._chunks)
+
+    def _get_extend_fn(self, C: int):
+        if C not in self._extend_fns:
+            cfg, sc = self.cfg, self.sc
+            self._extend_fns[C] = jax.jit(
+                lambda p, toks, kp, vp, table, lengths, nv: M.extend_paged(
+                    p, cfg, toks,
+                    {"k_pages": kp, "v_pages": vp, "page_table": table,
+                     "lengths": lengths},
+                    nv, tp=sc.tp),
+                donate_argnums=(2, 3))
+        return self._extend_fns[C]
+
+    def prefill_step(self) -> bool:
+        """Advance every mid-prefill slot by one chunk. Returns True if any
+        chunk work was done (call between decode steps to interleave)."""
+        if not self._chunks:
+            return False
+        self._ensure_pool()
+        C = self.sc.prefill_chunk
+        n = self.sc.n_slots
+        toks = np.zeros((n, C), np.int32)
+        n_valid = np.zeros((n,), np.int32)
+        for slot, (rid, prompt, pos) in self._chunks.items():
+            take = min(C, len(prompt) - pos)
+            toks[slot, :take] = prompt[pos: pos + take]
+            n_valid[slot] = take
+        lengths = np.asarray([s.length for s in self.slots.slots], np.int32)
+        lengths = np.where(n_valid > 0, lengths, 0)
+        t0 = time.perf_counter()
+        table = self._table_view(lengths, extra=C)
+        logits, pool = self._get_extend_fn(C)(
+            self.params, jnp.asarray(toks), self.pool.device["k_pages"],
+            self.pool.device["v_pages"], table, jnp.asarray(lengths),
+            jnp.asarray(n_valid))
+        self.pool.device["k_pages"] = pool["k_pages"]
+        self.pool.device["v_pages"] = pool["v_pages"]
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for slot in list(self._chunks):
+            rid, prompt, pos = self._chunks[slot]
+            take = int(n_valid[slot])
+            self.slots.slots[slot].length += take
+            if pos + take >= len(prompt):
+                self._pending[slot] = nxt[slot]
+                del self._chunks[slot]
+            else:
+                self._chunks[slot][2] = pos + take
+        return True
+
+    # -- pooled decode --------------------------------------------------
+
+    def _view_len(self, needed: int) -> int:
+        """Logical length of the gathered decode view: enough pages for the
+        longest live slot, bucketed (pow2 multiples of the alignment granule)
+        so the jit cache stays small. This is what kills the watermark tax —
+        a pool whose longest live sequence is 300 tokens attends over a
+        512-token view, not ``max_len``."""
+        if not self.sc.view_buckets:
+            return self.sc.max_len
+        g = self._gran
+        units = _next_pow2(max(1, -(-needed // g)))
+        return min(g * units, self.sc.max_len)
+
+    def _table_view(self, lengths: np.ndarray, extra: int = 1) -> jnp.ndarray:
+        """Page table restricted to the bucketed view length."""
+        needed = int(lengths.max()) + extra if lengths.size else 1
+        vl = self._view_len(needed)
+        npv = vl // self.sc.kv_page_size
+        return self.pool.device["page_table"][:, :npv]
+
+    def _decode_live(self) -> np.ndarray:
+        """Slots that decode this step: live and not mid-prefill."""
+        live = self.slots.live_mask()
+        for slot in self._chunks:
+            live[slot] = False
+        return live
+
     def step_pool(self) -> List[Tuple[int, int, int]]:
         """One decode step for every live slot; returns (request_id, slot,
-        token) emissions. NOTE: the pooled path tracks a shared `length`
-        watermark (max over slots); per-slot masking handles shorter ones."""
+        token) emissions. Paged path: per-slot lengths (each slot attends,
+        writes, and rotates at its own position); legacy path: shared
+        ``lengths.max()`` watermark."""
         self._ensure_pool()
+        if not self.sc.paged:
+            return self._step_pool_dense()
+        live = self._decode_live()
+        if not live.any():
+            return []
+        lengths = np.where(live, self.slots.lengths(), 0).astype(np.int32)
+        t0 = time.perf_counter()
+        table = self._table_view(lengths)
+        tok = jnp.asarray(self._pending)
+        logits, pool = self._decode_paged(
+            self.params, tok, self.pool.device["k_pages"],
+            self.pool.device["v_pages"], table, jnp.asarray(lengths),
+            jnp.asarray(live), self.sparse_params)
+        self.pool.device["k_pages"] = pool["k_pages"]
+        self.pool.device["v_pages"] = pool["v_pages"]
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        out = []
+        for i in np.flatnonzero(live):
+            rid = self.slots.slots[i].request_id
+            out.append((rid, int(i), int(self._pending[i])))
+            self._pending[i] = nxt[i]
+        self.stats["tokens"] += len(out)
+        self.slots.step(live)
+        for i in np.flatnonzero(live):
+            if self.slots.slots[i].done:
+                self.pool.release(int(i))
+        return out
+
+    def _step_pool_dense(self) -> List[Tuple[int, int, int]]:
+        """Legacy baseline: dense pool, shared length watermark (max over
+        slots) — every slot pays the longest sequence's attention cost and
+        the sparse fallback cond sees the watermark, not true lengths."""
         live = self.slots.live_mask()
         if not live.any():
             return []

@@ -1,16 +1,27 @@
-"""Slot-based KV cache manager for continuous batching.
+"""Slot + page managers for continuous batching.
 
-The engine owns a fixed pool of ``n_slots`` sequences x ``max_len`` tokens
-(the model-side caches are the dense arrays from models.make_cache, batch dim
-= n_slots). This manager tracks slot liveness, per-slot lengths, admission,
-and release — the host-side bookkeeping that turns a static-shape jitted
-decode step into a continuous-batching server.
+``SlotManager`` tracks slot liveness, per-slot lengths, admission, and
+release — the host-side bookkeeping that turns a static-shape jitted decode
+step into a continuous-batching server.
+
+``PagedKVPool`` is the host-side allocator for the paged KV pool: a shared
+arena of fixed-size physical pages (device arrays built by
+``models.make_page_pool``) addressed through per-slot page tables. Slots
+reserve ``ceil((prompt + max_new) / page_size)`` pages at admission and give
+them back at release, so HBM scales with the tokens actually in flight
+instead of ``n_slots * max_len``, and the pool can be oversubscribed
+(``total_pages`` smaller than full backing) — admission simply waits when no
+pages are free. Physical page 0 is reserved as the permanent zero page:
+unallocated page-table entries point at it and freed pages are scrubbed back
+to zero, which is what makes pooled decode bit-match per-request decode.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -57,3 +68,92 @@ class SlotManager:
 
     def utilization(self) -> float:
         return 1.0 - len(self.free_slots()) / self.n_slots
+
+
+class PagedKVPool:
+    """Host-side page allocator over the device arrays of a paged KV pool.
+
+    The device side (``models.make_page_pool``) is a dict
+    ``{k_pages, v_pages, page_table, lengths}``; this class owns the free
+    list and the authoritative host page table, and hands the engine a
+    device view to thread through the jitted decode/extend steps.
+    """
+
+    def __init__(self, cfg, n_slots: int, max_len: int, *,
+                 page_size: int = 16, total_pages: int = 0, tp: int = 16):
+        from repro.models import model as M
+
+        assert max_len % page_size == 0, (max_len, page_size)
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_slot = max_len // page_size
+        # +1 for the reserved zero page 0; 0 -> full backing (no
+        # oversubscription), otherwise the caller picks the arena size.
+        full = n_slots * self.pages_per_slot + 1
+        self.total_pages = total_pages or full
+        assert self.total_pages >= 2, "need at least one allocatable page"
+        self.device = M.make_page_pool(cfg, n_slots, max_len,
+                                       page_size=page_size,
+                                       total_pages=self.total_pages, tp=tp)
+        self.table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self.owned: List[List[int]] = [[] for _ in range(n_slots)]
+        # LIFO free list; page 0 is never handed out
+        self.free: List[int] = list(range(self.total_pages - 1, 0, -1))
+        # freed pages must be scrubbed before reuse so the pool stays zero
+        # outside live regions; pad to a fixed count to keep one jit.
+        # Donated: release() replaces the device references with the outputs.
+        self._zero_pages = jax.jit(
+            lambda kp, vp, idx: (kp.at[:, idx].set(0.0),
+                                 vp.at[:, idx].set(0.0)),
+            donate_argnums=(0, 1))
+
+    # -- allocation ----------------------------------------------------
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return max(1, -(-n_tokens // self.page_size))
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        return self.pages_needed(n_tokens) <= len(self.free)
+
+    def alloc(self, slot: int, n_tokens: int) -> bool:
+        """Reserve pages for ``n_tokens`` logical tokens in ``slot``."""
+        need = self.pages_needed(n_tokens)
+        if need > len(self.free) or need > self.pages_per_slot:
+            return False
+        assert not self.owned[slot], f"slot {slot} already holds pages"
+        got = [self.free.pop() for _ in range(need)]
+        self.owned[slot] = got
+        self.table[slot, :need] = got
+        self._push_table()
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return a slot's pages to the free list and scrub them to zero."""
+        got = self.owned[slot]
+        if not got:
+            return
+        # pad with the zero page (re-zeroing it is a no-op) for a static jit
+        idx = np.zeros((self.pages_per_slot,), np.int32)
+        idx[: len(got)] = got
+        kp, vp = self._zero_pages(self.device["k_pages"],
+                                  self.device["v_pages"], jnp.asarray(idx))
+        self.device["k_pages"], self.device["v_pages"] = kp, vp
+        self.free.extend(reversed(got))
+        self.owned[slot] = []
+        self.table[slot] = 0
+        self._push_table()
+
+    # -- views / stats -------------------------------------------------
+
+    def _push_table(self) -> None:
+        self.device["page_table"] = jnp.asarray(self.table)
+
+    def pages_in_use(self) -> int:
+        return sum(len(o) for o in self.owned)
+
+    def n_free(self) -> int:
+        return len(self.free)
+
+    def tokens_capacity(self) -> int:
+        return (self.total_pages - 1) * self.page_size

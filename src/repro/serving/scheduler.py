@@ -2,9 +2,15 @@
 
 The engine's jitted decode step has a static batch (= slot count); the
 scheduler's job is to keep those slots full: admit queued requests into free
-slots (prefill), step the pooled decode, collect completions, and report
-utilization — the serving-side counterpart of the paper's batch-scaling
-study (Table 4).
+slots, step the pooled decode, collect completions, and report utilization —
+the serving-side counterpart of the paper's batch-scaling study (Table 4).
+
+Admission no longer serializes under load: queued short prompts are admitted
+TOGETHER (the engine buckets them by length and runs one pre-jitted prefill
+per bucket), long prompts are admitted in chunked mode — their pages are
+reserved up front and the prompt streams in ``prefill_chunk``-sized spans
+interleaved with decode steps, bounded per step by ``prefill_token_budget``
+so decode latency stays flat while prefill drains.
 """
 from __future__ import annotations
 
@@ -29,8 +35,9 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, engine: Engine):
+    def __init__(self, engine: Engine, prefill_token_budget: int = 2048):
         self.engine = engine
+        self.prefill_token_budget = prefill_token_budget
         self.queue: collections.deque = collections.deque()
         self.inflight: Dict[int, Request] = {}
         self.done: Dict[int, Request] = {}
@@ -43,18 +50,44 @@ class Scheduler:
         return rid
 
     def _admit(self):
-        while self.queue:
+        """FCFS batch admission within the per-step prefill token budget."""
+        budget = self.prefill_token_budget
+        batch: List[Request] = []
+        chunked = self.engine.sc.paged
+        while self.queue and budget > 0:
             req = self.queue[0]
-            if not self.engine.admit(req.request_id, req.prompt, req.max_new):
-                break
+            plen = len(req.prompt)
+            if chunked and plen > self.engine.sc.chunk_threshold:
+                # long prompt: reserve pages now, stream the prompt later
+                if not self.engine.admit_chunked(req.request_id, req.prompt,
+                                                 req.max_new):
+                    break
+                self.queue.popleft()
+                self.inflight[req.request_id] = req
+                continue
+            if batch and plen > budget:
+                break                      # defer the rest to the next step
+            batch.append(req)
             self.queue.popleft()
-            self.inflight[req.request_id] = req
+            budget -= plen
+        if not batch:
+            return
+        oks = self.engine.admit_many(
+            [(r.request_id, r.prompt, r.max_new) for r in batch])
+        # re-queue rejections at the FRONT, preserving FCFS order
+        for r, ok in zip(reversed(batch), reversed(oks)):
+            if ok:
+                self.inflight[r.request_id] = r
+            else:
+                self.queue.appendleft(r)
 
     def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
         """Drain the queue; returns completed requests."""
         steps = 0
         while (self.queue or self.inflight) and steps < max_steps:
             self._admit()
+            prefilled = self.engine.has_prefill_work() and \
+                self.engine.prefill_step()
             emissions = self.engine.step_pool()
             steps += 1
             for rid, slot, tok in emissions:
@@ -66,8 +99,12 @@ class Scheduler:
                     req.finished = time.perf_counter()
                     self.done[rid] = req
                     del self.inflight[rid]
-            if not emissions and not self.queue:
-                break
+            if not emissions and not prefilled:
+                if not self.queue:
+                    break
+                if not self.inflight and not self.engine.has_prefill_work():
+                    break          # head request can never admit: stuck
+
         return self.done
 
     def throughput_tokens_per_s(self) -> float:

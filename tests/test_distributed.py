@@ -28,11 +28,12 @@ def test_device_isolation():
     assert out.strip() == "8"
 
 
+@pytest.mark.slow
 def test_distributed_topk_and_decode_exact():
     out = _run(r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
-mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2,4), ("data","model"))
 from repro.distributed.topk import distributed_relevancy_topk, distributed_sparse_decode
 from repro.kernels import ref
 rng = np.random.default_rng(0)
@@ -62,11 +63,13 @@ print("OK")
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """One train step on a (2,4) mesh == the same step on 1 device."""
     out = _run(r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh, use_mesh
 from repro.configs import get_arch
 from repro.models import init_params
 from repro.train import make_train_step, init_opt_state, TrainConfig
@@ -79,7 +82,7 @@ b = {k: jnp.asarray(v) for k, v in TokenStream(cfg.vocab_size, 32, 4, seed=0).ne
 tc = TrainConfig(tp=4)
 step = make_train_step(cfg, tc)
 
-mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2,4), ("data","model"))
 specs = sh.param_specs(params, cfg, mesh)
 shards = sh.make_shardings(specs, mesh)
 params_sh = jax.device_put(params, shards)
@@ -87,7 +90,7 @@ opt_sh = init_opt_state(params_sh)
 opt_ref = init_opt_state(params)
 # run the sharded step FIRST: device_put may alias replicated leaves, and
 # the single-device step donates (deletes) its inputs.
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     p2, _, st2 = jax.jit(step)(params_sh, opt_sh, b)
 p_ref, _, st_ref = step(params, opt_ref, b)
 assert abs(float(st_ref["loss"]) - float(st2["loss"])) < 2e-3, (st_ref["loss"], st2["loss"])
@@ -101,9 +104,9 @@ print("OK")
 def test_gpipe_pipeline_parallel():
     out = _run(r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.launch.mesh import make_mesh
 from repro.distributed.pipeline_parallel import gpipe_forward, bubble_fraction
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((4,), ("pod",))
 n_stages, M, mb, d = 4, 8, 2, 16
 ws = jnp.asarray(np.random.default_rng(0).standard_normal((n_stages, d, d)) / 4, jnp.float32)
 xs = jnp.asarray(np.random.default_rng(1).standard_normal((M, mb, d)), jnp.float32)
@@ -124,14 +127,15 @@ def test_checkpoint_elastic_reshard():
     """Checkpoint written from an 8-device mesh restores onto 4 devices."""
     out = _run(r"""
 import jax, jax.numpy as jnp, numpy as np, tempfile
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh
 from repro.distributed import checkpoint as ckpt
-mesh8 = jax.make_mesh((2,4), ("data","model"), axis_types=(AxisType.Auto,)*2)
+mesh8 = make_mesh((2,4), ("data","model"))
 w = jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
                    NamedSharding(mesh8, P("data","model")))
 d = tempfile.mkdtemp()
 ckpt.save(d, 1, {"w": w})
-mesh4 = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+mesh4 = make_mesh((4,), ("model",))
 tgt = NamedSharding(mesh4, P(None, "model"))
 back = ckpt.restore(d, 1, {"w": jnp.zeros((8,8))}, shardings={"w": tgt})
 assert back["w"].sharding == tgt
@@ -159,16 +163,17 @@ def test_dryrun_cell_executes():
         "compute", "memory", "collective")
 
 
+@pytest.mark.slow
 def test_cached_index_decode_matches_stateless():
     """§Perf iteration 3 correctness: the incremental index cache path
     (prepare-once) must produce the same attention output as the stateless
     distributed path that re-projects the whole context every step."""
     out = _run(r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs import get_arch
 from repro.core.methods import dsa
-mesh = jax.make_mesh((2,4), ("data","model"), axis_types=(AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2,4), ("data","model"))
 cfg = get_arch("llama3.2-1b").smoke()
 mem = cfg.memory.replace(top_k=32, index_heads=4, index_dim=32)
 page = 8
