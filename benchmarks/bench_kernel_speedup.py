@@ -17,6 +17,17 @@ from repro.kernels import ops, ref
 
 
 def run():
+    # run.py keeps going after a failed bench, so the use_pallas(False)
+    # below must be undone even on exceptions — later benches in the same
+    # process (e2e, batch_scaling, hetero_overlap) need the kernels back.
+    prev = ops.pallas_enabled()
+    try:
+        return _run()
+    finally:
+        ops.use_pallas(prev)
+
+
+def _run():
     rows = []
     rng = np.random.default_rng(0)
     B, Hq, dk, k = 1, 64, 128, 2048
@@ -27,6 +38,8 @@ def run():
         w = jnp.abs(jnp.asarray(rng.standard_normal((B, Hq)), jnp.float32))
 
         unfused = jax.jit(lambda q, kk, w: ref.relevancy_topk(q, kk, w, k))
+        # route the "fused" side through the jitted XLA reference too (CPU
+        # interpret-mode Pallas would swamp the comparison); run() restores.
         ops.use_pallas(False)
         fused = jax.jit(lambda q, kk, w: ops.relevancy_topk(q, kk, w, k,
                                                             block=4096))

@@ -28,6 +28,24 @@ def pick(full, smoke):
     return smoke if _SMOKE["on"] else full
 
 
+# Machine-readable results registry: benchmark modules deposit structured
+# payloads here and run.py serializes everything to BENCH_PR<N>.json at the
+# repo root so the perf trajectory is diffable across PRs. Each payload is
+# stamped with the mode it was measured under so a partial refresh
+# (run.py --only) can never pass smoke numbers off as full-run ones.
+_RESULTS = {}
+
+
+def record_result(section: str, name: str, payload) -> None:
+    if isinstance(payload, dict):
+        payload = dict(payload, smoke=is_smoke())
+    _RESULTS.setdefault(section, {})[name] = payload
+
+
+def results() -> dict:
+    return _RESULTS
+
+
 def timeit(fn, *args, warmup=2, iters=5):
     """Median wall time of fn(*args) in seconds (block_until_ready)."""
     if _SMOKE["on"]:

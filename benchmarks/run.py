@@ -1,10 +1,15 @@
 """Benchmark orchestrator — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows (stdout).
+Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes the
+structured payloads modules deposit via ``common.record_result`` to
+``BENCH_PR2.json`` at the repo root (method, tokens/s, per-stage
+fractions, ...) so the perf trajectory is diffable across PRs.
 
 ``--smoke``: tiny configs and single iterations (run in CI so benchmark code
 can't silently rot). Smoke numbers are execution proofs, not measurements.
+``--only SUBSTR``: run only benches whose label contains SUBSTR.
 """
 import argparse
+import json
 import os
 import sys
 import time
@@ -16,7 +21,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 from benchmarks import common
 from benchmarks import (bench_memory_fraction, bench_kernel_speedup,
                         bench_e2e, bench_energy, bench_batch_scaling,
-                        bench_comm_bytes)
+                        bench_comm_bytes, bench_hetero_overlap)
 
 BENCHES = [
     ("memory_fraction (Fig 3/4/5)", bench_memory_fraction),
@@ -25,27 +30,55 @@ BENCHES = [
     ("energy (Table 3)", bench_energy),
     ("batch_scaling (Table 4)", bench_batch_scaling),
     ("comm_bytes (App C.1/Fig 16)", bench_comm_bytes),
+    ("hetero_overlap (§5.3 offload)", bench_hetero_overlap),
 ]
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_PR2.json")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny configs, 1 iteration (CI execution check)")
+    ap.add_argument("--only", default="",
+                    help="run only benches whose label contains this")
     args = ap.parse_args()
     common.set_smoke(args.smoke)
     print("name,us_per_call,derived")
     failures = 0
+    rows = []
     for label, mod in BENCHES:
+        if args.only and args.only not in label:
+            continue
         t0 = time.time()
         try:
             for r in mod.run():
+                rows.append(r)
                 print(r, flush=True)
             print(f"# {label}: done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failures += 1
             print(f"# {label}: FAILED\n# " +
                   traceback.format_exc().replace("\n", "\n# "), flush=True)
+    payload = {"smoke": common.is_smoke(), "results": common.results(),
+               "rows": rows}
+    if (args.only or failures) and os.path.exists(JSON_PATH):
+        # partial or partially-failed run: refresh the sections + rows that
+        # actually ran; keep the rest of the committed cross-PR artifact
+        # intact (every results payload carries its own "smoke" stamp from
+        # common.record_result)
+        with open(JSON_PATH) as f:
+            old = json.load(f)
+        old.setdefault("results", {}).update(payload["results"])
+        by_name = {r.split(",", 1)[0]: r for r in rows}
+        old["rows"] = [by_name.pop(r.split(",", 1)[0], r)
+                       for r in old.get("rows", [])] + list(by_name.values())
+        payload = old
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {JSON_PATH}", flush=True)
     if failures:
         sys.exit(1)
 

@@ -8,8 +8,14 @@ memory-processing pipeline as a first-class feature — compare methods:
 Methods: none (dense baseline) | dsa | seer | lserve. The engine's traced
 lax.cond implements the paper's dynamic fallback (dense below min_context /
 above fallback_context).
+
+``--offload on`` routes the memory-processing stages through the hetero
+subsystem (overlapped lookahead selection on a second device — start with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` for a real split)
+and prints the per-stage overhead breakdown from its profiler.
 """
 import argparse
+import json
 import os
 import sys
 import time
@@ -34,14 +40,22 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--offload", default="off",
+                    choices=["on", "off", "sync", "overlap"],
+                    help="hetero offload executor (on = overlap)")
     args = ap.parse_args()
+    from repro.hetero import resolve_cli_offload
+    try:
+        offload = resolve_cli_offload(args.offload, args.method)
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = get_arch(args.arch).smoke()
     params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
     eng = Engine(cfg, params,
                  ServeConfig(max_len=args.prompt_len + args.max_new + 16,
                              n_slots=args.slots, method=args.method, tp=4,
-                             page=8),
+                             page=8, offload=offload),
                  key=jax.random.PRNGKey(1))
     sch = Scheduler(eng)
     rng = np.random.default_rng(0)
@@ -53,11 +67,14 @@ def main():
     wall = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in done.values())
     lat = [r.finished - r.submitted for r in done.values()]
-    print(f"method={args.method} completed={len(done)}/{args.requests} "
-          f"tokens={toks}")
+    print(f"method={args.method} offload={offload} "
+          f"completed={len(done)}/{args.requests} tokens={toks}")
     print(f"wall={wall:.2f}s throughput={toks / wall:.1f} tok/s "
           f"p50_latency={np.median(lat):.2f}s p95={np.quantile(lat, .95):.2f}s")
     print(f"slot utilization={eng.slots.utilization():.2f}")
+    if eng.hetero is not None:
+        print("hetero per-stage breakdown (Fig. 3 style):")
+        print(json.dumps(eng.hetero.report(), indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -15,3 +15,18 @@ def get_sparse_method(name: str):
     if name not in SPARSE_METHODS:
         raise KeyError(f"unknown sparse method {name!r}: {sorted(SPARSE_METHODS)}")
     return SPARSE_METHODS[name]
+
+
+_METHOD_MODULES = {
+    "dsa": dsa, "seer": seer, "lserve": lserve, "rag": rag,
+    "memagent": memagent, "mac": mac, "ttt": ttt,
+}
+
+
+def offload_stages(name: str) -> tuple:
+    """Which pipeline stages of ``name`` may leave the KV-owning device
+    (paper §5.2): stages that read only the compressed index / documents.
+    Declared per method as ``OFFLOAD_STAGES``; methods without the
+    attribute (or unknown names like 'none') offload nothing."""
+    mod = _METHOD_MODULES.get(name)
+    return getattr(mod, "OFFLOAD_STAGES", ()) if mod else ()

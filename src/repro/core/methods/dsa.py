@@ -28,6 +28,11 @@ from repro.models import layers as L
 
 Params = Dict
 
+# Stages the hetero subsystem may move off the KV-owning device (paper
+# §5.2): the indexer reads only compressed index vectors; apply gathers raw
+# KV pages and must stay with the pool.
+OFFLOAD_STAGES = ("prepare", "relevancy", "retrieve")
+
 
 def dsa_init(key, cfg: ArchConfig, mem: MemoryConfig, stacked: bool = True):
     """Per-layer lightning-indexer params, stacked [L, ...] for the scan."""

@@ -21,6 +21,10 @@ from repro.kernels import ops, ref as kref
 
 Params = Dict
 
+# Hetero offload metadata: the page min/max summaries are the only inputs
+# to relevancy/retrieve; sparse apply stays with the KV pool.
+OFFLOAD_STAGES = ("prepare", "relevancy", "retrieve")
+
 
 def lserve_init(key, cfg: ArchConfig, mem: MemoryConfig, stacked: bool = True):
     # LServe's prepare/relevancy are projection-free (min/max pooling of raw

@@ -30,6 +30,10 @@ from repro.models import layers as L
 
 Params = Dict
 
+# Hetero offload metadata (paper Fig. 6c): the memory bank lives with the
+# retrieval engine; only retrieved embeddings move to the generator.
+OFFLOAD_STAGES = ("prepare", "relevancy", "retrieve")
+
 
 @dataclasses.dataclass
 class MacConfig:

@@ -22,6 +22,10 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, MemoryConfig
 from repro.core.pipeline import MemoryPipeline
 
+# Hetero offload metadata: both active stages ARE model passes (decode /
+# prefill) — nothing leaves the compute engine.
+OFFLOAD_STAGES = ()
+
 
 @dataclasses.dataclass
 class MemAgentConfig:

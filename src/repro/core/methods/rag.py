@@ -28,6 +28,10 @@ from repro.configs.base import ArchConfig, MemoryConfig
 from repro.core.pipeline import MemoryPipeline
 from repro.kernels import ops, ref as kref
 
+# Hetero offload metadata: the document index (TF stats, embeddings) lives
+# with the retrieval engine; apply is pure prompt assembly on the generator.
+OFFLOAD_STAGES = ("prepare", "relevancy", "retrieve")
+
 
 @dataclasses.dataclass
 class Corpus:

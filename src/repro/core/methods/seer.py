@@ -26,6 +26,10 @@ from repro.models import layers as L
 
 Params = Dict
 
+# Hetero offload metadata: gate pooling + block scoring touch only the
+# pooled gate cache; block-sparse apply stays with the KV pool.
+OFFLOAD_STAGES = ("prepare", "relevancy", "retrieve")
+
 
 def seer_init(key, cfg: ArchConfig, mem: MemoryConfig, stacked: bool = True):
     hd = cfg.hd

@@ -26,6 +26,10 @@ from repro.models import layers as L
 
 Params = Dict
 
+# Hetero offload metadata: paper §4 — "we do NOT deploy it on the
+# heterogeneous system"; every stage stays on the main device.
+OFFLOAD_STAGES = ()
+
 
 def ttt_init(key, cfg: ArchConfig, fast_dim: int = 0) -> Params:
     d = cfg.d_model

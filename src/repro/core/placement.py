@@ -36,12 +36,16 @@ class StageCost:
     def intensity(self) -> float:
         return self.flops / max(self.bytes, 1.0)
 
+    @property
+    def memory_bound(self) -> bool:
+        """Roofline: HBM streaming, not FLOPs, sets this stage's time."""
+        return self.bytes / HBM_BW >= self.flops / PEAK_FLOPS
+
     def seconds(self) -> float:
         return max(self.flops / PEAK_FLOPS, self.bytes / HBM_BW)
 
     def watts(self) -> float:
-        return (POWER_COMPUTE_W if self.flops / PEAK_FLOPS >
-                self.bytes / HBM_BW else POWER_MEMBOUND_W)
+        return POWER_MEMBOUND_W if self.memory_bound else POWER_COMPUTE_W
 
 
 def sparse_attention_stage_costs(cfg: ArchConfig, mem: MemoryConfig,
@@ -85,19 +89,24 @@ def dense_decode_cost(cfg: ArchConfig, context: int, batch: int = 1) -> StageCos
     )
 
 
-def choose_path(cfg: ArchConfig, mem: MemoryConfig, context: int,
-                batch: int = 1) -> str:
-    """'dense' | 'sparse' — the paper's dynamic fallback, roofline-driven.
+def in_sparse_window(context: int, mem: MemoryConfig) -> bool:
+    """Host-side dynamic-fallback window (paper §5.2 / Appendix F).
 
-    Below min_context the pipeline overhead dominates (paper Fig. 3: 1-11% at
-    4K); above fallback_context the compressed index itself spills (paper:
-    >1M tokens the FPGA loses to the GPU) — both fall back to dense.
+    Below min_context the pipeline overhead dominates (paper Fig. 3: 1-11%
+    at 4K); above fallback_context the compressed index itself spills
+    (paper: >1M tokens the FPGA loses to the GPU). This is the ONE owner of
+    the window; ``traced_use_sparse`` is its jit-traced twin and the hetero
+    policy's ``dynamic_mode`` delegates here — keep all three aligned.
     """
     if mem.method in ("none", "ttt"):
-        return "dense"
-    if context < mem.min_context:
-        return "dense"
-    if context > mem.fallback_context:
+        return False
+    return mem.min_context <= context <= mem.fallback_context
+
+
+def choose_path(cfg: ArchConfig, mem: MemoryConfig, context: int,
+                batch: int = 1) -> str:
+    """'dense' | 'sparse' — the paper's dynamic fallback, roofline-driven."""
+    if not in_sparse_window(context, mem):
         return "dense"
     costs = sparse_attention_stage_costs(cfg, mem, context, batch)
     sparse_s = sum(c.seconds() for c in costs.values()) - costs["rest"].seconds()

@@ -1,0 +1,22 @@
+"""Heterogeneous offload subsystem (paper §4-§5).
+
+Emulates the paper's GPU<->FPGA split on two JAX devices: the sparse,
+memory-bound memory-processing stages (prepare / relevancy / retrieve) run
+on a secondary device and exchange only compact indices with the primary
+device that keeps the compute-dense decode (apply + rest). Run the test /
+CI configuration with ``XLA_FLAGS=--xla_force_host_platform_device_count=2``
+to get two real host devices; with one device the subsystem still runs (the
+transfer queue degenerates to no-ops) so single-device environments stay
+supported.
+"""
+from repro.hetero.executor import HeteroExecutor
+from repro.hetero.policy import (OffloadPlan, dynamic_mode, pick_devices,
+                                 plan_stage_placement, resolve_cli_offload)
+from repro.hetero.profiler import HeteroProfiler
+from repro.hetero.transfer import TransferLedger
+
+__all__ = [
+    "HeteroExecutor", "HeteroProfiler", "OffloadPlan", "TransferLedger",
+    "dynamic_mode", "pick_devices", "plan_stage_placement",
+    "resolve_cli_offload",
+]

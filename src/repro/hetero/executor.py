@@ -1,0 +1,287 @@
+"""Async offload executor: overlaps memory processing with decode (§5).
+
+Two-phase decode with ONE STEP OF LOOKAHEAD, double-buffered across two
+JAX devices:
+
+  main device     apply_t (sparse attention over preselected pages + the
+                  dense transformer remainder), then ships this step's
+                  per-layer queries/keys to the offload device;
+  offload device  runs select_{t+1} (prepare/relevancy/retrieve over its
+                  incrementally maintained index summary) CONCURRENTLY
+                  with apply_t, and ingests step t's keys afterwards.
+
+The selection serving step t therefore saw the queries of step t-2 and the
+keys through step t-2 — the stale-lookahead semantics the paper accepts in
+exchange for hiding the memory-bound stages entirely (the freshly written
+page is force-included at apply time, so recency is never lost).
+
+Scheduling modes share ONE dataflow — every jitted function runs with the
+same inputs in the same buffer order — and differ only in barriers:
+
+  "overlap"  no host barriers; JAX async dispatch queues select_{t+1} on
+             the offload device while the main device runs apply_t.
+  "sync"     block_until_ready between phases: select, apply, ingest run
+             serially. This is the honest single-timeline baseline the
+             benchmarks compare against.
+
+Because the dataflow is identical, the two modes are bit-identical
+(tests/test_hetero.py proves it per method); ``validate=True`` additionally
+re-executes every consumed selection synchronously from the pinned inputs
+and asserts bitwise equality + stale-index validity, turning any buffer
+misuse in the async schedule into an immediate failure.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MemoryConfig
+from repro.hetero import policy as hpolicy
+from repro.hetero.profiler import HeteroProfiler
+from repro.hetero.select import make_offload_select
+from repro.hetero.transfer import TransferLedger
+from repro.models import model as M
+
+
+class HeteroExecutor:
+    def __init__(self, cfg: ArchConfig, mem: MemoryConfig, sc,
+                 sparse_params, *, mode: str = "overlap",
+                 validate: bool = False, devices=None):
+        assert mode in ("sync", "overlap"), mode
+        self.cfg, self.mem, self.sc, self.mode = cfg, mem, sc, mode
+        self.validate = validate
+        self.main_dev, self.off_dev = devices or hpolicy.pick_devices()
+        self.sel = make_offload_select(sc.method, cfg, mem,
+                                       dsa_page=sc.page,
+                                       n_slots=sc.n_slots,
+                                       max_len=sc.max_len)
+        self.plan = hpolicy.plan_stage_placement(cfg, mem, sc.max_len)
+        self.ledger = TransferLedger()
+        self.profiler = HeteroProfiler(cfg, mem, mode)
+
+        # offload-resident state: method params, index summary, stale query
+        self.sp_off = jax.device_put(sparse_params, self.off_dev)
+        self.summary = jax.device_put(self.sel.summary_init(), self.off_dev)
+        from repro.models import layers as L
+        hp = cfg.padded_heads(sc.tp)
+        self.q_buf = jax.device_put(
+            jnp.zeros((cfg.n_layers, sc.n_slots, hp, cfg.hd),
+                      L.dtype_of(cfg)), self.off_dev)
+        self.sel_buf = None            # selection for the NEXT decode step
+        self._sel_inputs = None        # pinned (summary, q, lengths) of it
+        self._neg_sel = jax.device_put(
+            jnp.full((cfg.n_layers, sc.n_slots, self.sel.n_sel), -1,
+                     jnp.int32), self.main_dev)
+
+        self._select_jit = jax.jit(self.sel.select)
+        self._ingest_jit = jax.jit(self.sel.ingest)
+        self._span_jits: Dict[Tuple[int, int], callable] = {}
+        self._apply_jits: Dict[int, callable] = {}
+
+    # ------------------------------------------------------------------
+    # jit builders
+    # ------------------------------------------------------------------
+
+    def _apply_fn(self, n_pages_view: int):
+        if n_pages_view not in self._apply_jits:
+            cfg, mem, sc, ps = self.cfg, self.mem, self.sc, self.sel.page
+            self._apply_jits[n_pages_view] = jax.jit(
+                lambda p, tok, kp, vp, table, lengths, live, pidx:
+                M.decode_step_paged_presel(
+                    p, cfg, tok,
+                    {"k_pages": kp, "v_pages": vp, "page_table": table,
+                     "lengths": lengths},
+                    live, pidx, mem, page_size=ps, tp=sc.tp),
+                donate_argnums=(2, 3))
+        return self._apply_jits[n_pages_view]
+
+    def _span_fn(self, Bg: int, S: int):
+        key = (Bg, S)
+        if key not in self._span_jits:
+            self._span_jits[key] = jax.jit(self.sel.ingest_span)
+        return self._span_jits[key]
+
+    def _launch_select(self, lengths_np: np.ndarray):
+        """Queue a selection on the offload device from the CURRENT summary
+        and stale-query buffers; pins the inputs for validation."""
+        lengths = jnp.asarray(lengths_np, jnp.int32)
+        inputs = (self.summary, self.q_buf, lengths)
+        self._sel_inputs = inputs
+        return self._select_jit(self.sp_off, *inputs)
+
+    # ------------------------------------------------------------------
+    # admission / prefill hooks (keep the offload index coherent)
+    # ------------------------------------------------------------------
+
+    def on_admit(self, slot_ids: List[int], k_masked, true_lens: np.ndarray,
+                 q_last) -> None:
+        """Bucketed admission: reset the slots' summary rows, bulk-ship the
+        prompt keys (the memory moves to the accelerator at prefill, §5.1),
+        seed the stale-query buffer with the last-prompt-token queries."""
+        sid = jax.device_put(jnp.asarray(slot_ids, jnp.int32), self.off_dev)
+        self.summary = self.sel.reset(self.summary, sid)
+        k_off = self.ledger.ship_down(k_masked, self.off_dev, bulk=True)
+        q_off = self.ledger.ship_down(q_last, self.off_dev, bulk=True)
+        Bg, S = k_off.shape[1], k_off.shape[2]
+        self.summary = self._span_fn(Bg, S)(
+            self.summary, self.sp_off, k_off, sid,
+            jnp.zeros((Bg,), jnp.int32), jnp.asarray(true_lens, jnp.int32))
+        self.q_buf = self.q_buf.at[:, sid].set(
+            q_off.astype(self.q_buf.dtype))
+        self.invalidate()
+
+    def on_admit_slot(self, slot: int) -> None:
+        """Chunked admission: clear the slot's rows; keys arrive per chunk."""
+        sid = jax.device_put(jnp.asarray([slot], jnp.int32), self.off_dev)
+        self.summary = self.sel.reset(self.summary, sid)
+        self.q_buf = self.q_buf.at[:, sid].set(0.0)
+        self.invalidate()
+
+    def on_extend(self, k_span, q_last, start_np: np.ndarray,
+                  n_valid_np: np.ndarray, finished: bool) -> None:
+        """Chunked-prefill chunk landed: ingest the span, refresh the
+        stale query of every advancing slot. Counted as bulk prefill
+        traffic — it is admission-time memory shipping, not the per-step
+        decode exchange."""
+        k_off = self.ledger.ship_down(k_span, self.off_dev, bulk=True)
+        q_off = self.ledger.ship_down(q_last, self.off_dev, bulk=True)
+        Bg, S = k_off.shape[1], k_off.shape[2]
+        sid = jnp.arange(Bg, dtype=jnp.int32)
+        self.summary = self._span_fn(Bg, S)(
+            self.summary, self.sp_off, k_off, sid,
+            jnp.asarray(start_np, jnp.int32),
+            jnp.asarray(n_valid_np, jnp.int32))
+        adv = jnp.asarray(n_valid_np > 0)
+        self.q_buf = jnp.where(adv[None, :, None, None],
+                               q_off.astype(self.q_buf.dtype), self.q_buf)
+        if finished:
+            self.invalidate()
+
+    def invalidate(self) -> None:
+        """Drop the pending lookahead (membership of the pool changed); the
+        next decode step cold-starts a fresh selection. Both scheduling
+        modes invalidate at the same host events, so determinism holds."""
+        self.sel_buf = None
+        self._sel_inputs = None
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+
+    def decode(self, params, tok, pool_device: Dict, table,
+               lengths_np: np.ndarray, live_np: np.ndarray):
+        """One pooled decode step. Returns (logits, {k_pages, v_pages})."""
+        sync = self.mode == "sync"
+        t_step = time.perf_counter()
+        lengths = jnp.asarray(lengths_np, jnp.int32)
+        live = jnp.asarray(live_np)
+        context = int(lengths_np.max()) + 1 if live_np.any() else 1
+        offloaded = hpolicy.dynamic_mode(context, self.mem) == "offload"
+
+        t_sel = 0.0
+        if offloaded:
+            if self.sel_buf is None:                      # cold start
+                t0 = time.perf_counter()
+                self.sel_buf = self._launch_select(lengths_np)
+                if sync:
+                    jax.block_until_ready(self.sel_buf)
+                    t_sel += time.perf_counter() - t0
+            pidx_inputs = self._sel_inputs
+            pidx = self.ledger.ship_up(self.sel_buf, self.main_dev)
+        else:
+            # dynamic fallback: single-device execution, no offload work
+            pidx_inputs, pidx = None, self._neg_sel
+            self.invalidate()
+
+        # pin the pre-step offload state for the lookahead (the overlapped
+        # select must not see this step's keys/queries)
+        summary_prev, q_prev = self.summary, self.q_buf
+        next_sel = next_inputs = None
+        if offloaded and not sync:
+            # queue select_{t+1} BEFORE apply_t: JAX async dispatch runs it
+            # on the offload device while the main device decodes
+            next_sel = self._launch_select(lengths_np + live_np)
+            next_inputs = self._sel_inputs
+
+        if sync:
+            jax.block_until_ready(pidx)
+        t0 = time.perf_counter()
+        logits, pool, q_t, k_t = self._apply_fn(table.shape[1])(
+            params, tok, pool_device["k_pages"], pool_device["v_pages"],
+            table, lengths, live, pidx)
+        if sync:
+            jax.block_until_ready(logits)
+            t_apply = time.perf_counter() - t0
+        else:
+            t_apply = None
+
+        if offloaded and sync:
+            t0 = time.perf_counter()
+            next_sel = self._launch_select(lengths_np + live_np)
+            next_inputs = self._sel_inputs
+            jax.block_until_ready(next_sel)
+            t_sel += time.perf_counter() - t0
+
+        # ship this step's queries/keys down; ingest into the index summary
+        # (also during local fallback — the index must stay coherent for
+        # when the context re-enters the offload window)
+        self.ledger.tick()
+        t0 = time.perf_counter()
+        q_off = self.ledger.ship_down(q_t, self.off_dev)
+        k_off = self.ledger.ship_down(k_t, self.off_dev)
+        self.summary = self._ingest_jit(summary_prev, self.sp_off, k_off,
+                                        lengths, live)
+        self.q_buf = jnp.where(live[None, :, None, None],
+                               q_off.astype(q_prev.dtype), q_prev)
+        if sync:
+            jax.block_until_ready(self.summary)
+            if offloaded:   # local-fallback ingest is pool upkeep — not a
+                t_sel += time.perf_counter() - t0   # select-phase cost
+        self.sel_buf, self._sel_inputs = next_sel, next_inputs
+
+        if self.validate and offloaded and pidx_inputs is not None:
+            self._validate(pidx, pidx_inputs)
+        self.profiler.record_step(
+            int(live_np.sum()), context, time.perf_counter() - t_step,
+            select_s=t_sel if sync else None, apply_s=t_apply,
+            offloaded=offloaded)
+        return logits, pool
+
+    # ------------------------------------------------------------------
+    # validation mode
+    # ------------------------------------------------------------------
+
+    def _validate(self, pidx, inputs) -> None:
+        """Re-run the consumed selection synchronously from its pinned
+        inputs: async result must be bit-identical, and every index must be
+        a valid stale pick (inside the live region it was computed from)."""
+        summary, q, lengths = inputs
+        ref = jax.block_until_ready(self._select_jit(self.sp_off, summary,
+                                                     q, lengths))
+        got = np.asarray(jax.block_until_ready(pidx))
+        if not np.array_equal(got, np.asarray(ref)):
+            raise AssertionError(
+                "overlapped selection diverged from its synchronous replay")
+        lens = np.asarray(lengths)
+        sel_ok = (got == -1) | ((got >= 0)
+                                & (got * self.sel.page < lens[None, :, None]))
+        if not sel_ok.all():
+            raise AssertionError("stale lookahead produced out-of-window "
+                                 "page indices")
+
+    # ------------------------------------------------------------------
+
+    def report(self) -> Dict:
+        d = self.profiler.summary(self.ledger, cfg=self.cfg,
+                                  n_sel=self.sel.n_sel, page=self.sel.page,
+                                  batch=self.sc.n_slots)
+        d["devices"] = {"main": str(self.main_dev),
+                        "offload": str(self.off_dev),
+                        "distinct": self.main_dev != self.off_dev}
+        d["plan"] = {"stages": dict(self.plan.stages),
+                     "offloaded": list(self.plan.offloaded())}
+        return d

@@ -1,0 +1,98 @@
+"""Placement policy for the heterogeneous offload subsystem.
+
+Decides, per memory-pipeline stage, which device executes it (paper §4
+Table 2 + §5.2). Two rules compose:
+
+  1. KV ownership: a stage that reads the *raw* KV values (apply) is pinned
+     to the device that owns the KV pool — shipping pages over the
+     interconnect is exactly what the paper's index-only design avoids.
+     This is encoded as per-method stage metadata
+     (``core.methods.offload_stages``).
+  2. Roofline: among the offloadable stages, only the memory-bound ones
+     (bytes-limited under ``placement.StageCost``) actually move — a
+     compute-dense stage is better served by the main device's FLOPs.
+
+On top of the static plan sits the paper's DYNAMIC FALLBACK (§5.2 /
+Appendix F): outside the ``[min_context, fallback_context]`` window the
+whole step collapses to single-device dense execution; the executor then
+launches no offload work at all. ``dynamic_mode`` is the host-side mirror
+of the traced predicate ``placement.traced_use_sparse`` — the two MUST
+agree or the engine would launch selections that the jitted cond ignores
+(or vice versa).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.configs.base import ArchConfig, MemoryConfig
+from repro.core import placement
+from repro.core.methods import offload_stages
+
+MAIN = "main"
+OFFLOAD = "offload"
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadPlan:
+    """Static stage->device plan plus the roofline evidence behind it."""
+
+    method: str
+    stages: Dict[str, str]            # stage -> MAIN | OFFLOAD
+    intensity: Dict[str, float]       # stage -> FLOP/byte
+    memory_bound: Dict[str, bool]
+
+    def offloaded(self) -> Tuple[str, ...]:
+        return tuple(s for s, d in self.stages.items() if d == OFFLOAD)
+
+
+def plan_stage_placement(cfg: ArchConfig, mem: MemoryConfig, context: int,
+                         batch: int = 1) -> OffloadPlan:
+    """Static placement for the sparse-attention pipeline at ``context``."""
+    costs = placement.sparse_attention_stage_costs(cfg, mem, context, batch)
+    allowed = set(offload_stages(mem.method))
+    stages, intensity, membound = {}, {}, {}
+    for name, c in costs.items():
+        intensity[name] = c.intensity
+        membound[name] = c.memory_bound
+        stages[name] = OFFLOAD if (name in allowed and c.memory_bound) \
+            else MAIN
+    return OffloadPlan(mem.method, stages, intensity, membound)
+
+
+def dynamic_mode(context: int, mem: MemoryConfig) -> str:
+    """'offload' | 'local' — host-side mirror of the traced fallback window.
+
+    ``context`` is the max live context of the step INCLUDING the token
+    being decoded (``lengths.max() + 1``), matching what the jitted cond in
+    ``decode_step_paged_presel`` sees. Delegates to the single window owner
+    in ``placement`` so the host schedule cannot drift from the traced
+    branch.
+    """
+    return "offload" if placement.in_sparse_window(context, mem) else "local"
+
+
+def resolve_cli_offload(value: str, method: str) -> str:
+    """Map a launcher's ``--offload on|off|sync|overlap`` flag to a
+    ``ServeConfig.offload`` mode (shared by launch/serve.py and the
+    serving example). Raises ValueError when offload is requested without
+    a sparse method."""
+    mode = {"on": "overlap", "off": "off"}.get(value, value)
+    if mode != "off" and method == "none":
+        raise ValueError(
+            "--offload needs a sparse --method (dsa | seer | lserve)")
+    return mode
+
+
+def pick_devices():
+    """(main, offload) JAX devices.
+
+    With ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` (or a real
+    second accelerator) the offload device is distinct; otherwise both
+    resolve to device 0 and the executor's transfers become no-ops — the
+    subsystem stays functional on single-device environments.
+    """
+    import jax
+
+    devs = jax.devices()
+    return (devs[0], devs[1]) if len(devs) >= 2 else (devs[0], devs[0])

@@ -1,0 +1,262 @@
+"""Offload-side memory index + selection (the emulated FPGA bitstream).
+
+For each sparse method the offload device keeps a compact, incrementally
+maintained SUMMARY of the key cache in logical (slot, page) space — the
+paper's "compressed memory resides on the accelerator" — and answers
+lookahead queries with top-k page indices:
+
+  dsa    : per-micro-page SUM of lightning-indexer key projections
+           (mean recovered at score time; score = w-weighted ReLU inner
+           product, identical math to the fused relevancy kernel);
+  seer   : per-block SUM of gate-projected keys (mean-pooled block keys),
+           optional threshold selection on softmax-normalized scores;
+  lserve : per-logical-page channel-wise MIN/MAX of raw keys, max-reduced
+           over physical-page groups.
+
+Summaries are updated from the SAME per-layer keys the main device writes
+into the KV pool (one token per decode step, spans at prefill), so summary
+state is a pure function of the token stream — which is what makes the
+overlapped executor bit-match its synchronous schedule. Zero-initialized
+summaries mirror the paged pool's zero-page invariant: a page the pool
+considers zero scores exactly like an all-zero key page.
+
+All functions are pure jnp so the executor can jit them once and pin them
+to the offload device via committed inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MemoryConfig
+
+NEG_INF = -1e30
+BIG = 3e30  # finite min/max sentinel (inf would poison 0 * inf -> nan)
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadSelect:
+    """Per-method offload-side implementation bundle."""
+
+    method: str
+    page: int                 # selection granularity (tokens per page)
+    n_sel: int                # width of the returned index vector
+    n_pages: int              # logical pages per slot (max_len // page)
+    summary_init: Callable    # () -> summary pytree
+    reset: Callable           # (summary, slot_ids) -> summary
+    ingest: Callable          # (summary, sp, k_new, pos, live) -> summary
+    ingest_span: Callable     # (summary, sp, k_span, slots, start, n_valid)
+    select: Callable          # (sp, summary, q_layers, lengths) -> pidx
+
+
+def _qf_layers(q_layers: jnp.ndarray, n_in: int) -> jnp.ndarray:
+    """[L, B, Hp, hd] -> [L, B, n_in]: flatten heads, strip TP dead-head
+    padding (matches the inline ``qf[:, :n_in]`` slice)."""
+    L, B = q_layers.shape[:2]
+    return q_layers.reshape(L, B, -1)[:, :, :n_in]
+
+
+def _mask_topk(scores: jnp.ndarray, lengths: jnp.ndarray, page: int,
+               k: int):
+    """scores [L, B, P]; mask pages beyond the live region, then top-k.
+    Returns (vals, idx) with idx = -1 where nothing live was selectable."""
+    P = scores.shape[-1]
+    page_live = (jnp.arange(P)[None, None, :] * page
+                 < lengths[None, :, None])
+    scores = jnp.where(page_live, scores, NEG_INF)
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, jnp.where(vals > NEG_INF / 2, idx, -1)
+
+
+# ---------------------------------------------------------------------------
+# shared per-page SUM summary (dsa indexer projections / seer gate
+# projections differ only in page size and projection-weight key)
+# ---------------------------------------------------------------------------
+
+
+def _sum_summary(key: str, weight: str, page: int, L: int, n_slots: int,
+                 P: int, di: int):
+    """(summary_init, reset, ingest, ingest_span) for a summary that holds,
+    per logical page, the SUM of ``k @ sp[weight]`` over its live tokens."""
+
+    def summary_init():
+        return {key: jnp.zeros((L, n_slots, P, di), jnp.float32)}
+
+    def reset(s, slot_ids):
+        return {key: s[key].at[:, slot_ids].set(0.0)}
+
+    def _contrib(sp, k):  # [L, ..., KV, hd] -> [L, ..., di]
+        kf = k.reshape(*k.shape[:-2], -1)
+        return jnp.einsum("l...f,lfd->l...d", kf,
+                          sp[weight]).astype(jnp.float32)
+
+    def ingest(s, sp, k_new, pos, live):
+        B = pos.shape[0]
+        c = _contrib(sp, k_new) * live.astype(jnp.float32)[None, :, None]
+        pages = jnp.clip(pos // page, 0, P - 1)
+        return {key: s[key].at[:, jnp.arange(B), pages].add(c)}
+
+    def ingest_span(s, sp, k_span, slot_ids, start, n_valid):
+        S = k_span.shape[2]
+        valid = jnp.arange(S)[None, :] < n_valid[:, None]        # [Bg, S]
+        c = _contrib(sp, k_span) * valid[None, :, :, None]
+        pages = jnp.clip((start[:, None] + jnp.arange(S)[None, :]) // page,
+                         0, P - 1)                               # [Bg, S]
+        return {key: s[key].at[:, slot_ids[:, None], pages].add(c)}
+
+    return summary_init, reset, ingest, ingest_span
+
+
+# ---------------------------------------------------------------------------
+# dsa — lightning-indexer micro-page sums
+# ---------------------------------------------------------------------------
+
+
+def _dsa(cfg: ArchConfig, mem: MemoryConfig, page: int, n_slots: int,
+         max_len: int) -> OffloadSelect:
+    P = max_len // page
+    n_sel = min(max(mem.top_k // page, 1), P)
+    L = cfg.n_layers
+    di = mem.index_dim
+    n_in = cfg.n_heads * cfg.hd
+    summary_init, reset, ingest, ingest_span = _sum_summary(
+        "kidx_sum", "wk_idx", page, L, n_slots, P, di)
+
+    def select(sp, s, q_layers, lengths):
+        qf = _qf_layers(q_layers, n_in)
+        q_idx = jnp.einsum("lbf,lfe->lbe", qf, sp["wq_idx"])
+        q_idx = q_idx.reshape(*q_idx.shape[:2], -1, di).astype(jnp.float32)
+        w = jax.nn.softmax(
+            jnp.einsum("lbf,lfh->lbh", qf.astype(jnp.float32), sp["w_wgt"]),
+            axis=-1)
+        kp = s["kidx_sum"] * (1.0 / page)         # page means, [L, B, P, di]
+        dots = jnp.einsum("lbhd,lbpd->lbhp", q_idx, kp)
+        scores = jnp.einsum("lbh,lbhp->lbp", w, jax.nn.relu(dots))
+        _, idx = _mask_topk(scores, lengths, page, n_sel)
+        return idx.astype(jnp.int32)
+
+    return OffloadSelect("dsa", page, n_sel, P, summary_init, reset, ingest,
+                         ingest_span, select)
+
+
+# ---------------------------------------------------------------------------
+# seer — gate-projected block sums (+ threshold selection)
+# ---------------------------------------------------------------------------
+
+
+def _seer(cfg: ArchConfig, mem: MemoryConfig, n_slots: int,
+          max_len: int) -> OffloadSelect:
+    bs = mem.block_size
+    P = max_len // bs
+    n_sel = min(max(mem.token_budget // bs, 1), P)
+    L = cfg.n_layers
+    di = mem.index_dim
+    n_in = cfg.n_heads * cfg.hd
+    summary_init, reset, ingest, ingest_span = _sum_summary(
+        "kgate_sum", "wk_gate", bs, L, n_slots, P, di)
+
+    def select(sp, s, q_layers, lengths):
+        qf = _qf_layers(q_layers, n_in)
+        q_gate = jnp.einsum("lbf,lfd->lbd", qf,
+                            sp["wq_gate"]).astype(jnp.float32)
+        k_blk = s["kgate_sum"] * (1.0 / bs)                 # block means
+        scores = jax.nn.relu(
+            jnp.einsum("lbd,lbpd->lbp", q_gate, k_blk))
+        vals, idx = _mask_topk(scores, lengths, bs, n_sel)
+        if mem.selection == "threshold":
+            probs = jax.nn.softmax(vals, axis=-1)
+            idx = jnp.where(probs >= mem.threshold, idx, -1)
+        return idx.astype(jnp.int32)
+
+    return OffloadSelect("seer", bs, n_sel, P, summary_init, reset, ingest,
+                         ingest_span, select)
+
+
+# ---------------------------------------------------------------------------
+# lserve — per-page channel min/max bounds, physical-page grouping
+# ---------------------------------------------------------------------------
+
+
+def _lserve(cfg: ArchConfig, mem: MemoryConfig, n_slots: int,
+            max_len: int) -> OffloadSelect:
+    ps = mem.block_size
+    ppp = mem.pages_per_physical
+    P = max_len // ps
+    Pphys = max(P // ppp, 1)
+    n_phys = min(max(mem.token_budget // (ps * ppp), 1), Pphys)
+    n_sel = n_phys * ppp
+    L = cfg.n_layers
+    kv, hd = cfg.n_kv_heads, cfg.hd
+
+    def summary_init():
+        return {"pmin": jnp.full((L, n_slots, P, kv, hd), BIG, jnp.float32),
+                "pmax": jnp.full((L, n_slots, P, kv, hd), -BIG, jnp.float32)}
+
+    def reset(s, slot_ids):
+        return {"pmin": s["pmin"].at[:, slot_ids].set(BIG),
+                "pmax": s["pmax"].at[:, slot_ids].set(-BIG)}
+
+    def ingest(s, sp, k_new, pos, live):
+        B = pos.shape[0]
+        kf = k_new.astype(jnp.float32)
+        m = live[None, :, None, None]
+        lo = jnp.where(m, kf, BIG)
+        hi = jnp.where(m, kf, -BIG)
+        pages = jnp.clip(pos // ps, 0, P - 1)
+        b = jnp.arange(B)
+        return {"pmin": s["pmin"].at[:, b, pages].min(lo),
+                "pmax": s["pmax"].at[:, b, pages].max(hi)}
+
+    def ingest_span(s, sp, k_span, slot_ids, start, n_valid):
+        S = k_span.shape[2]
+        kf = k_span.astype(jnp.float32)
+        valid = (jnp.arange(S)[None, :]
+                 < n_valid[:, None])[None, :, :, None, None]
+        lo = jnp.where(valid, kf, BIG)
+        hi = jnp.where(valid, kf, -BIG)
+        pages = jnp.clip((start[:, None] + jnp.arange(S)[None, :]) // ps,
+                         0, P - 1)
+        return {"pmin": s["pmin"].at[:, slot_ids[:, None], pages].min(lo),
+                "pmax": s["pmax"].at[:, slot_ids[:, None], pages].max(hi)}
+
+    def select(sp, s, q_layers, lengths):
+        # reduce the kv-head axis for the bound (same as the inline path)
+        pmin = s["pmin"].max(axis=3)                       # [L, B, P, hd]
+        pmax = s["pmax"].max(axis=3)
+        qf = q_layers.astype(jnp.float32)                  # [L, B, Hp, hd]
+        pm = jnp.maximum(qf[:, :, :, None, :] * pmin[:, :, None],
+                         qf[:, :, :, None, :] * pmax[:, :, None])
+        sc = pm.sum(-1).mean(axis=2)                       # [L, B, P]
+        page_live = (jnp.arange(P)[None, None, :] * ps
+                     < lengths[None, :, None])
+        sc = jnp.where(page_live, sc, NEG_INF)
+        phys = sc.reshape(*sc.shape[:2], Pphys, ppp).max(-1)
+        vals, pidx = jax.lax.top_k(phys, n_phys)           # [L, B, n_phys]
+        logical = (pidx[..., None] * ppp + jnp.arange(ppp)
+                   ).reshape(*pidx.shape[:2], -1)          # [L, B, n_sel]
+        live = ((logical * ps < lengths[None, :, None])
+                & jnp.repeat(vals > NEG_INF / 2, ppp, axis=-1))
+        return jnp.where(live, logical, -1).astype(jnp.int32)
+
+    return OffloadSelect("lserve", ps, n_sel, P, summary_init, reset, ingest,
+                         ingest_span, select)
+
+
+# ---------------------------------------------------------------------------
+
+
+def make_offload_select(method: str, cfg: ArchConfig, mem: MemoryConfig, *,
+                        dsa_page: int, n_slots: int,
+                        max_len: int) -> OffloadSelect:
+    builders: Dict[str, Callable] = {
+        "dsa": lambda: _dsa(cfg, mem, dsa_page, n_slots, max_len),
+        "seer": lambda: _seer(cfg, mem, n_slots, max_len),
+        "lserve": lambda: _lserve(cfg, mem, n_slots, max_len),
+    }
+    if method not in builders:
+        raise KeyError(f"method {method!r} has no offload-side selection: "
+                       f"{sorted(builders)}")
+    return builders[method]()

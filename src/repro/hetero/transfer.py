@@ -1,0 +1,79 @@
+"""Index-only device exchange + transfer-bytes accounting (paper §5.2).
+
+The paper's PCIe-minimizing design ships three things and nothing else:
+
+  down (main -> offload): the new per-layer keys of each decoded token
+      (to keep the offload-resident memory index coherent) and the
+      per-layer query activations (the relevancy input);
+  bulk (main -> offload): the prompt's keys once at admission — the
+      analogue of materializing the memory on the FPGA during prefill;
+  up (offload -> main): top-k PAGE INDICES. Never KV pages.
+
+``TransferLedger`` wraps ``jax.device_put`` so every exchange is counted,
+and carries the analytic comparator (what shipping the retrieved KV pages
+instead would cost) used by the benchmarks and the profiler JSON.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+
+def pytree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+class TransferLedger:
+    def __init__(self):
+        self.down_bytes = 0      # per-step index maintenance (q + new keys)
+        self.bulk_bytes = 0      # admission-time prompt key shipping
+        self.up_bytes = 0        # selection indices coming back
+        self.steps = 0
+
+    # -- counted device_put wrappers -----------------------------------
+
+    def ship_down(self, tree, device, *, bulk: bool = False):
+        n = pytree_bytes(tree)
+        if bulk:
+            self.bulk_bytes += n
+        else:
+            self.down_bytes += n
+        return jax.device_put(tree, device)
+
+    def ship_up(self, tree, device):
+        self.up_bytes += tree.size * tree.dtype.itemsize
+        return jax.device_put(tree, device)
+
+    def tick(self):
+        self.steps += 1
+
+    # -- analytic comparator -------------------------------------------
+
+    @staticmethod
+    def kv_pages_bytes_per_step(cfg, n_sel: int, page: int,
+                                batch: int = 1) -> int:
+        """Bytes/step a naive design would move: the retrieved K AND V
+        pages for every layer (the thing the index-only exchange avoids)."""
+        itemsize = 2  # bf16 cache
+        return (cfg.n_layers * batch * n_sel * page *
+                cfg.n_kv_heads * cfg.hd * itemsize * 2)
+
+    def as_dict(self, cfg=None, n_sel: int = 0, page: int = 0,
+                batch: int = 1) -> Dict:
+        d = {
+            "down_bytes": int(self.down_bytes),
+            "bulk_prefill_bytes": int(self.bulk_bytes),
+            "up_bytes": int(self.up_bytes),
+            "steps": int(self.steps),
+        }
+        if self.steps:
+            d["down_bytes_per_step"] = self.down_bytes / self.steps
+            d["up_bytes_per_step"] = self.up_bytes / self.steps
+        if cfg is not None and n_sel and self.steps:
+            kv = self.kv_pages_bytes_per_step(cfg, n_sel, page, batch)
+            d["kv_pages_bytes_per_step_avoided"] = kv
+            moved = (self.down_bytes + self.up_bytes) / self.steps
+            d["exchange_reduction_x"] = kv / max(moved, 1.0)
+        return d

@@ -31,9 +31,12 @@ def relevancy_scores(q: jnp.ndarray, keys: jnp.ndarray,
 
 
 def relevancy_topk(q, keys, weights, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact oracle: (vals [B,k], idx [B,k]) sorted descending."""
+    """Exact oracle: (vals [B,k], idx [B,k]) sorted descending.
+
+    ``k`` is clamped to the key count, matching the fused kernel path
+    (ops.relevancy_topk passes ``min(k, S)`` to the candidate merge)."""
     scores = relevancy_scores(q, keys, weights)
-    return jax.lax.top_k(scores, k)
+    return jax.lax.top_k(scores, min(k, keys.shape[1]))
 
 
 # ---------------------------------------------------------------------------
@@ -151,4 +154,4 @@ def bm25_scores(tf: jnp.ndarray, doc_len: jnp.ndarray, idf: jnp.ndarray,
 
 def bm25_topk(tf, doc_len, idf, k: int, **kw):
     scores = bm25_scores(tf, doc_len, idf, **kw)
-    return jax.lax.top_k(scores, k)
+    return jax.lax.top_k(scores, min(k, scores.shape[-1]))  # match ops path

@@ -8,10 +8,16 @@ scheduler with the memory pipeline enabled.
 (Fig. 6b): the mesh's data axis is partitioned into prefill/decode submeshes
 (on this CPU container both resolve to the same device; the mesh plumbing is
 exercised either way).
+
+``--offload on`` serves through the hetero offload executor (overlapped
+lookahead selection on a second device, src/repro/hetero) and prints its
+per-stage overhead breakdown; launch with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` for a real split.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -33,7 +39,15 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--tp", type=int, default=4)
     ap.add_argument("--disaggregate", action="store_true")
+    ap.add_argument("--offload", default="off",
+                    choices=["on", "off", "sync", "overlap"],
+                    help="hetero offload executor (on = overlap)")
     args = ap.parse_args(argv)
+    from repro.hetero import resolve_cli_offload
+    try:
+        offload = resolve_cli_offload(args.offload, args.method)
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = get_arch(args.arch).smoke()
     params = init_params(cfg, jax.random.PRNGKey(0), tp=args.tp)
@@ -46,7 +60,7 @@ def main(argv=None):
     eng = Engine(cfg, params,
                  ServeConfig(max_len=args.prompt_len + args.max_new + 16,
                              n_slots=args.slots, method=args.method,
-                             tp=args.tp, page=8),
+                             tp=args.tp, page=8, offload=offload),
                  key=jax.random.PRNGKey(1))
     sch = Scheduler(eng)
     rng = np.random.default_rng(0)
@@ -57,8 +71,12 @@ def main(argv=None):
     done = sch.run()
     wall = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in done.values())
-    print(f"method={args.method}: {len(done)}/{args.requests} requests, "
+    print(f"method={args.method} offload={offload}: "
+          f"{len(done)}/{args.requests} requests, "
           f"{toks} tokens, {toks / wall:.1f} tok/s")
+    if eng.hetero is not None:
+        print("hetero per-stage breakdown (Fig. 3 style):")
+        print(json.dumps(eng.hetero.report(), indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

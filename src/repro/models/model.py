@@ -141,7 +141,7 @@ def _attn_out(lp: Params, out: jnp.ndarray, cfg: ArchConfig, tp: int):
 
 
 def _tf_layer_full(lp, x, cos, sin, cfg, tp):
-    """Full-sequence transformer layer; returns (x, aux, (k, v))."""
+    """Full-sequence transformer layer; returns (x, aux, (k, v, q))."""
     h = _sp_gather(L.rms_norm(lp["attn_norm"], x, cfg.norm_eps))
     q, k, v = A.project_qkv(lp["attn"], h, cos, sin, cfg, tp)
     attn = A.attention_full(q, k, v, cfg, tp=tp)
@@ -152,7 +152,7 @@ def _tf_layer_full(lp, x, cos, sin, cfg, tp):
         y, aux = M.moe_apply(lp["moe"], h, cfg)
     else:
         y, aux = L.mlp(lp["mlp"], h), jnp.zeros((), jnp.float32)
-    return x + y, aux, (k, v)
+    return x + y, aux, (k, v, q)
 
 
 def _tf_layer_decode(lp, x, cos, sin, cfg, tp, kc, vc, length, sparse_fn=None,
@@ -198,10 +198,17 @@ def forward(
     positions3: Optional[jnp.ndarray] = None,
     img_embeds: Optional[jnp.ndarray] = None,
     collect_cache: bool = False,
+    collect_q: bool = False,
     remat: bool = False,
     tp: int = 16,
 ):
-    """tokens [B, S] -> (hidden [B,S,d], aux, caches-or-None)."""
+    """tokens [B, S] -> (hidden [B,S,d], aux, caches-or-None).
+
+    ``collect_q`` additionally stashes the per-layer query activations in
+    ``caches["q"]`` ([L, B, S, Hp, hd]) — consumed by the hetero offload
+    executor to seed the lookahead relevancy query after prefill. It is a
+    prefill-only option; the cache dict handed to decode must not carry it.
+    """
     B, Sq = tokens.shape
     x = L.embed(params["embed"], tokens)
     if img_embeds is not None:  # vlm stub: patch embeddings overwrite prefix
@@ -217,8 +224,9 @@ def forward(
 
     def layer_fn(carry, lp):
         x, aux = carry
-        x, aux_l, kv = _tf_layer_full(lp, x, cos, sin, cfg, tp)
-        return (_sp(x), aux + aux_l), kv if collect_cache else None
+        x, aux_l, kvq = _tf_layer_full(lp, x, cos, sin, cfg, tp)
+        out = kvq if collect_q else kvq[:2]
+        return (_sp(x), aux + aux_l), out if collect_cache else None
 
     (x, aux), kvs = jax.lax.scan(_maybe_ckpt(layer_fn, remat), (x, jnp.zeros((), jnp.float32)),
                                  params["layers"])
@@ -226,6 +234,8 @@ def forward(
     caches = None
     if collect_cache:
         caches = {"k": kvs[0], "v": kvs[1], "length": jnp.asarray(Sq, jnp.int32)}
+        if collect_q:
+            caches["q"] = kvs[2]
     return x, aux, caches
 
 
@@ -240,8 +250,8 @@ def _hybrid_forward(params, cfg, x, cos, sin, collect_cache, remat, tp):
             return x + y, st if collect_cache else None
 
         x, states = jax.lax.scan(mamba_fn, x, body_lp)
-        x, aux_l, kv = _tf_layer_full(params["shared"], x, cos, sin, cfg, tp)
-        return (x, aux + aux_l), (states, kv if collect_cache else None)
+        x, aux_l, kvq = _tf_layer_full(params["shared"], x, cos, sin, cfg, tp)
+        return (x, aux + aux_l), (states, kvq[:2] if collect_cache else None)
 
     (x, aux), (body_states, shared_kvs) = jax.lax.scan(
         _maybe_ckpt(super_fn, remat), (x, jnp.zeros((), jnp.float32)), params["body"])
@@ -519,14 +529,105 @@ def decode_step_paged(params, cfg: ArchConfig, token, pool, live, *,
     return last_logits(params, cfg, x), pool
 
 
+def decode_step_paged_presel(params, cfg: ArchConfig, token, pool, live,
+                             pidx, mem, *, page_size: int, tp: int = 16):
+    """Apply-phase decode over the paged pool with PRE-SELECTED pages.
+
+    The hetero offload split (paper §5): prepare/relevancy/retrieve ran
+    elsewhere (offload device, one step of lookahead) and handed back only
+    page indices — this step is the compute-dense remainder that stays on
+    the main device. ``pidx [L, B, n_sel]`` holds per-layer selected page
+    ids in logical (per-slot) space, -1 = no selection.
+
+    Semantics vs the inline sparse path:
+      * the page currently being written (``lengths // page_size``) is
+        always force-included so the newest tokens are never invisible to
+        a stale selection (the paper's recency guarantee); a stale pick of
+        the same page is deduplicated to avoid double-counted softmax mass,
+      * indices outside the live region are dropped (stale-lookahead
+        validity mask),
+      * the paper's dynamic fallback stays a traced cond: outside
+        [min_context, fallback_context] the step runs dense attention and
+        ignores the selection entirely (single-device execution).
+
+    Returns (logits [B, V], pool', q_layers [L, B, Hp, hd], k_layers
+    [L, B, KV, hd]) — the per-layer query/key of THIS step feed the next
+    lookahead selection and the offload-side index update.
+    """
+    from repro.core import placement
+    from repro.core.methods.dsa import strip_dead_heads, repad_dead_heads
+    from repro.kernels import ops
+    from repro.kernels.page_pool import pool_gather, pool_scatter_token
+
+    B = token.shape[0]
+    ps = page_size
+    lengths = pool["lengths"]
+    table = pool["page_table"]
+    live = live.astype(bool)
+    x = L.embed(params["embed"], token[:, None])
+    positions = lengths[:, None]
+    positions3 = None
+    if cfg.rope_style == "mrope":
+        positions3 = jnp.broadcast_to(lengths[None, :, None], (3, B, 1))
+    cos, sin = _rope_tables(cfg, positions, positions3)
+
+    lb = lengths + 1                       # context incl. this step's token
+    cur_page = lengths // ps               # page receiving this step's write
+    use_sparse = placement.traced_use_sparse(lb, mem)
+
+    def layer_fn(x, lp_kv):
+        lp, kp, vp, sel = lp_kv
+        h = L.rms_norm(lp["attn_norm"], x, cfg.norm_eps)
+        q, k, v = A.project_qkv(lp["attn"], h, cos, sin, cfg, tp)
+        kp = pool_scatter_token(kp, table, lengths, k[:, 0], live)
+        vp = pool_scatter_token(vp, table, lengths, v[:, 0], live)
+        kc = pool_gather(kp, table)
+        vc = pool_gather(vp, table)
+
+        def sparse(_):
+            s = jnp.where(sel == cur_page[:, None], -1, sel)   # dedup recency
+            s = jnp.where(s * ps < lb[:, None], s, -1)         # validity mask
+            s_full = jnp.concatenate([s, cur_page[:, None]], axis=1)
+            out, _ = ops.paged_decode_attention(
+                strip_dead_heads(q, cfg), kc, vc, s_full.astype(jnp.int32),
+                lb, page_size=ps)
+            return repad_dead_heads(out, q, cfg)
+
+        def dense(_):
+            return A.attention_decode(q, kc, vc, lb, cfg, tp=tp)
+
+        attn = jax.lax.cond(use_sparse, sparse, dense, None)
+        x = x + _attn_out(lp["attn"], attn, cfg, tp)
+        h = L.rms_norm(lp["mlp_norm"], x, cfg.norm_eps)
+        if cfg.n_experts:
+            y, _ = M.moe_apply(lp["moe"], h, cfg)
+        else:
+            y = L.mlp(lp["mlp"], h)
+        return x + y, (kp, vp, q[:, 0], k[:, 0])
+
+    x, (k_new, v_new, q_layers, k_layers) = jax.lax.scan(
+        layer_fn, x, (params["layers"], pool["k_pages"], pool["v_pages"],
+                      pidx))
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    pool = dict(pool, k_pages=k_new, v_pages=v_new,
+                lengths=lengths + live.astype(jnp.int32))
+    return last_logits(params, cfg, x), pool, q_layers, k_layers
+
+
 def extend_paged(params, cfg: ArchConfig, tokens, pool, n_valid, *,
-                 tp: int = 16):
+                 tp: int = 16, collect_kq: bool = False):
     """Chunked prefill: append a span of C tokens per slot to the paged pool.
 
     tokens [B, C] int32 (rows padded past ``n_valid[b]``); pool from
     ``make_page_pool``; n_valid [B] int32 (0 = slot not prefilling this
     step). Queries attend causally to the existing prefix plus the chunk.
-    Returns (logits [B, V] at each row's last valid token, pool') —
+    Returns (logits [B, V] at each row's last valid token, pool').
+
+    With ``collect_kq`` two more outputs follow: k_span [L, B, C, KV, hd]
+    (the span's raw new keys, unmasked past ``n_valid``; consumers mask)
+    and q_last [L, B, Hp, hd] (the query at each row's last valid chunk
+    token) — consumed by the hetero offload executor to keep its
+    device-resident memory index coherent with the pool.
     ``decode_step_paged`` is the C=1 specialization of this, kept separate
     so the decode path can thread the sparse-method fallback.
     """
@@ -557,20 +658,26 @@ def extend_paged(params, cfg: ArchConfig, tokens, pool, n_valid, *,
             y, _ = M.moe_apply(lp["moe"], h, cfg)
         else:
             y = L.mlp(lp["mlp"], h)
-        return x + y, (kp, vp)
+        return x + y, ((kp, vp, k, q) if collect_kq else (kp, vp))
 
-    x, (k_new, v_new) = jax.lax.scan(
+    x, ys = jax.lax.scan(
         layer_fn, x, (params["layers"], pool["k_pages"], pool["v_pages"]))
+    k_new, v_new = ys[0], ys[1]
     x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
     last = jnp.clip(n_valid - 1, 0, C - 1)
     xg = jnp.take_along_axis(x, last[:, None, None], axis=1)   # [B, 1, d]
     logits = L.lm_head(params["lm_head"], xg, cfg)[:, 0]
     pool = dict(pool, k_pages=k_new, v_pages=v_new, lengths=lengths + n_valid)
-    return logits, pool
+    if not collect_kq:
+        return logits, pool
+    k_span, q_span = ys[2], ys[3]
+    q_last = jnp.take_along_axis(
+        q_span, last[None, :, None, None, None], axis=2)[:, :, 0]
+    return logits, pool, k_span, q_last
 
 
 def prefill_bucketed(params, cfg: ArchConfig, tokens, true_lens, *,
-                     tp: int = 16):
+                     tp: int = 16, collect_q: bool = False):
     """Batched admission prefill over a length bucket.
 
     tokens [B, Sb] right-padded prompts; true_lens [B] real lengths.
@@ -578,9 +685,15 @@ def prefill_bucketed(params, cfg: ArchConfig, tokens, true_lens, *,
     k/v [L, B, Sb, KV, hd] are zero-masked past ``true_lens`` so splicing
     them into the page pool leaves the dead region exactly zero (page-level
     relevancy scores must see the same zeros a per-request cache has).
+
+    With ``collect_q`` a fourth output ``q_last [L, B, Hp, hd]`` carries each
+    row's query activations at its last real token — the hetero offload
+    executor seeds its lookahead relevancy query with it so the first decode
+    step after admission selects pages with a real (one-step-stale) query.
     """
     B, Sb = tokens.shape
-    x, _, caches = forward(params, cfg, tokens, collect_cache=True, tp=tp)
+    x, _, caches = forward(params, cfg, tokens, collect_cache=True,
+                           collect_q=collect_q, tp=tp)
     last = jnp.clip(true_lens - 1, 0, Sb - 1)
     xg = jnp.take_along_axis(x, last[:, None, None], axis=1)
     logits = L.lm_head(params["lm_head"], xg, cfg)[:, 0]
@@ -588,7 +701,11 @@ def prefill_bucketed(params, cfg: ArchConfig, tokens, true_lens, *,
     m = mask[None, :, :, None, None]
     k = caches["k"] * m.astype(caches["k"].dtype)
     v = caches["v"] * m.astype(caches["v"].dtype)
-    return logits, k, v
+    if not collect_q:
+        return logits, k, v
+    q_last = jnp.take_along_axis(
+        caches["q"], last[None, :, None, None, None], axis=2)[:, :, 0]
+    return logits, k, v, q_last
 
 
 def _hybrid_decode(params, cfg, x, cos, sin, caches, tp, sparse_fn,

@@ -15,7 +15,11 @@
   prompts prefill in fixed-size chunks interleaved with decode steps,
 * the legacy dense ``n_slots x max_len`` pool with the shared
   ``lengths.max()`` watermark is kept behind ``ServeConfig(paged=False)`` as
-  the benchmark baseline (bench_batch_scaling old-vs-new comparison).
+  the benchmark baseline (bench_batch_scaling old-vs-new comparison),
+* ``ServeConfig(offload=...)`` routes the memory-processing stages through
+  the heterogeneous offload executor (src/repro/hetero): lookahead
+  selection on a second device, overlapped with decode, exchanging only
+  page indices — the paper's §5 system emulated on JAX devices.
 """
 from __future__ import annotations
 
@@ -57,6 +61,14 @@ class ServeConfig:
     chunk_threshold: int = 512 # prompts longer than this prefill in chunks
     view_buckets: bool = True  # size the decode view by max live length
                                # (pow2-bucketed) instead of max_len
+    # --- heterogeneous offload (src/repro/hetero) ---
+    # "off" = inline sparse pipeline; "sync" = two-phase select->apply on
+    # the offload device but serialized (validation/benchmark baseline);
+    # "overlap" = double-buffered lookahead selection overlapped with
+    # decode (the paper's heterogeneous execution). Requires paged=True and
+    # a sparse method (dsa | seer | lserve).
+    offload: str = "off"
+    offload_validate: bool = False  # replay each consumed selection + check
 
 
 class Engine:
@@ -110,6 +122,18 @@ class Engine:
 
             sparse_fn = fallback_fn
         self._sparse_fn = sparse_fn
+
+        self.hetero = None
+        if sc.offload != "off":
+            assert sc.offload in ("sync", "overlap"), sc.offload
+            assert sc.paged, "hetero offload runs over the paged pool"
+            assert sc.method in ("dsa", "seer", "lserve"), \
+                "hetero offload needs a sparse memory-processing method"
+            assert cfg.family in POOL_FAMILIES
+            from repro.hetero import HeteroExecutor
+            self.hetero = HeteroExecutor(
+                cfg, self.mem, self.sc, self.sparse_params,
+                mode=sc.offload, validate=sc.offload_validate)
 
         self._prefill = jax.jit(
             lambda p, toks: M.prefill(p, cfg, toks, max_len=sc.max_len,
@@ -203,9 +227,11 @@ class Engine:
         key = (B, Sb)
         if key not in self._bucket_fns:
             cfg, sc = self.cfg, self.sc
+            cq = self.hetero is not None
             self._bucket_fns[key] = jax.jit(
                 lambda p, toks, lens: M.prefill_bucketed(p, cfg, toks, lens,
-                                                         tp=sc.tp))
+                                                         tp=sc.tp,
+                                                         collect_q=cq))
         return self._bucket_fns[key]
 
     def _get_splice_fn(self, B: int, n_pages: int):
@@ -263,8 +289,14 @@ class Engine:
         for i, (_, prompt) in enumerate(group):
             toks[i, : len(prompt)] = prompt
             lens[i] = len(prompt)
-        logits, k, v = self._get_bucket_fn(B, Sb)(
+        out = self._get_bucket_fn(B, Sb)(
             self.params, jnp.asarray(toks), jnp.asarray(lens))
+        if self.hetero is not None:
+            logits, k, v, q_last = out
+            self.hetero.on_admit([slot for slot, _ in group], k, lens,
+                                 q_last)
+        else:
+            logits, k, v = out
         n_pages = Sb // ps
         dest = np.zeros((B, n_pages), np.int32)
         for i, (slot, _) in enumerate(group):
@@ -317,6 +349,8 @@ class Engine:
         assert self.pool.alloc(slot, total)
         self.slots.slots[slot].length = 0      # grows as chunks land
         self._chunks[slot] = [request_id, prompt, 0]
+        if self.hetero is not None:
+            self.hetero.on_admit_slot(slot)
         return True
 
     def has_prefill_work(self) -> bool:
@@ -325,12 +359,13 @@ class Engine:
     def _get_extend_fn(self, C: int):
         if C not in self._extend_fns:
             cfg, sc = self.cfg, self.sc
+            ckq = self.hetero is not None
             self._extend_fns[C] = jax.jit(
                 lambda p, toks, kp, vp, table, lengths, nv: M.extend_paged(
                     p, cfg, toks,
                     {"k_pages": kp, "v_pages": vp, "page_table": table,
                      "lengths": lengths},
-                    nv, tp=sc.tp),
+                    nv, tp=sc.tp, collect_kq=ckq),
                 donate_argnums=(2, 3))
         return self._extend_fns[C]
 
@@ -352,14 +387,16 @@ class Engine:
         lengths = np.where(n_valid > 0, lengths, 0)
         t0 = time.perf_counter()
         table = self._table_view(lengths, extra=C)
-        logits, pool = self._get_extend_fn(C)(
+        out = self._get_extend_fn(C)(
             self.params, jnp.asarray(toks), self.pool.device["k_pages"],
             self.pool.device["v_pages"], table, jnp.asarray(lengths),
             jnp.asarray(n_valid))
+        logits, pool = out[0], out[1]
         self.pool.device["k_pages"] = pool["k_pages"]
         self.pool.device["v_pages"] = pool["v_pages"]
         self.stats["prefill_s"] += time.perf_counter() - t0
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        finished = False
         for slot in list(self._chunks):
             rid, prompt, pos = self._chunks[slot]
             take = int(n_valid[slot])
@@ -367,8 +404,12 @@ class Engine:
             if pos + take >= len(prompt):
                 self._pending[slot] = nxt[slot]
                 del self._chunks[slot]
+                finished = True
             else:
                 self._chunks[slot][2] = pos + take
+        if self.hetero is not None:
+            k_span, q_last = out[2], out[3]
+            self.hetero.on_extend(k_span, q_last, lengths, n_valid, finished)
         return True
 
     # -- pooled decode --------------------------------------------------
@@ -414,10 +455,14 @@ class Engine:
         t0 = time.perf_counter()
         table = self._table_view(lengths)
         tok = jnp.asarray(self._pending)
-        logits, pool = self._decode_paged(
-            self.params, tok, self.pool.device["k_pages"],
-            self.pool.device["v_pages"], table, jnp.asarray(lengths),
-            jnp.asarray(live), self.sparse_params)
+        if self.hetero is not None:
+            logits, pool = self.hetero.decode(
+                self.params, tok, self.pool.device, table, lengths, live)
+        else:
+            logits, pool = self._decode_paged(
+                self.params, tok, self.pool.device["k_pages"],
+                self.pool.device["v_pages"], table, jnp.asarray(lengths),
+                jnp.asarray(live), self.sparse_params)
         self.pool.device["k_pages"] = pool["k_pages"]
         self.pool.device["v_pages"] = pool["v_pages"]
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)

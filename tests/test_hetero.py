@@ -1,0 +1,191 @@
+"""Heterogeneous offload subsystem (src/repro/hetero).
+
+The load-bearing property: the OVERLAPPED schedule (lookahead selection on
+the offload device, double-buffered against decode) must emit token streams
+BIT-IDENTICAL to the SYNCHRONOUS schedule of the same two-phase dataflow —
+async dispatch and the device transfer queue must not change results. On a
+single-device environment both "devices" resolve to CPU 0 and the property
+still holds; CI additionally runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` for a real split.
+
+Also covered: stale-lookahead validity (selections never point outside the
+live region they were computed from), the placement policy's stage->device
+plan, the dynamic single-device fallback window, and preservation of the
+paged pool's zero-page invariant under offload.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_arch
+from repro.core.methods import offload_stages
+from repro.hetero import dynamic_mode, pick_devices, plan_stage_placement
+from repro.models import init_params
+from repro.serving import Engine, ServeConfig, Scheduler
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("llama3.2-1b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
+    return cfg, params
+
+
+def _drain(eng, n_steps):
+    got = {}
+    for _ in range(n_steps):
+        if eng.has_prefill_work():
+            eng.prefill_step()
+        for rid, _slot, tok in eng.step_pool():
+            got.setdefault(rid, []).append(tok)
+    return got
+
+
+def _free_pages_zero(pool) -> bool:
+    """Every page on the free list (and the reserved page 0) must be zero."""
+    idx = np.asarray([0] + pool.free, np.int32)
+    k = np.asarray(pool.device["k_pages"][:, idx], np.float32)
+    v = np.asarray(pool.device["v_pages"][:, idx], np.float32)
+    return not k.any() and not v.any()
+
+
+@pytest.mark.parametrize("method", ["dsa", "seer", "lserve"])
+def test_overlap_bitmatches_sync(setup, method):
+    """Overlapped offload decode == synchronous two-phase decode, token for
+    token, for every sparse method; pages are returned clean afterwards."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (16, 9)]
+    streams = {}
+    for mode in ("sync", "overlap"):
+        sc = ServeConfig(max_len=64, n_slots=2, method=method, tp=4, page=8,
+                         kv_page_size=16, offload=mode,
+                         offload_validate=(mode == "overlap"))
+        eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+        oks = eng.admit_many([(i, p, 5) for i, p in enumerate(prompts)])
+        assert all(oks)
+        streams[mode] = _drain(eng, 6)
+        assert eng.pool.pages_in_use() == 0
+        assert _free_pages_zero(eng.pool)   # zero-page invariant survives
+    for rid in range(len(prompts)):
+        np.testing.assert_array_equal(streams["sync"][rid][:5],
+                                      streams["overlap"][rid][:5])
+
+
+def test_overlap_bitmatches_sync_under_scheduler(setup):
+    """Mixed workload (bucketed + chunked admission, staggered completion,
+    selection invalidation on every membership change) stays bit-identical
+    between the two schedules end to end."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (10, 40, 16, 33)]
+    streams = {}
+    for mode in ("sync", "overlap"):
+        sc = ServeConfig(max_len=128, n_slots=2, method="dsa", tp=4, page=8,
+                         kv_page_size=16, prefill_chunk=16,
+                         chunk_threshold=32, offload=mode)
+        eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+        sch = Scheduler(eng, prefill_token_budget=32)
+        rids = [sch.submit(p, max_new=4) for p in prompts]
+        done = sch.run()
+        assert sorted(done) == sorted(rids)
+        streams[mode] = {r: done[r].tokens for r in done}
+        assert eng.pool.pages_in_use() == 0
+        assert _free_pages_zero(eng.pool)
+    assert streams["sync"] == streams["overlap"]
+
+
+def test_seer_threshold_selection_offloads(setup):
+    """SeerAttention's threshold retrieval mode runs through the offload
+    select path and stays schedule-invariant."""
+    cfg, params = setup
+    mem = cfg.memory.replace(method="seer", selection="threshold")
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, size=20).astype(np.int32)
+    streams = {}
+    for mode in ("sync", "overlap"):
+        sc = ServeConfig(max_len=64, n_slots=2, method="seer", tp=4,
+                         kv_page_size=16, offload=mode)
+        eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0), mem=mem)
+        assert eng.admit(0, prompt, 5)
+        streams[mode] = _drain(eng, 6)
+    np.testing.assert_array_equal(streams["sync"][0], streams["overlap"][0])
+
+
+def test_stale_lookahead_validity(setup):
+    """validate=True replays every consumed selection synchronously (bitwise
+    equality) inside the executor; on top, the pending lookahead buffer must
+    only hold indices inside the live region it was computed from."""
+    cfg, params = setup
+    sc = ServeConfig(max_len=96, n_slots=2, method="dsa", tp=4, page=8,
+                     kv_page_size=16, offload="overlap",
+                     offload_validate=True)
+    eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    assert eng.admit(0, rng.integers(0, cfg.vocab_size, size=24), 6)
+    got = {}
+    for step in range(8):
+        for rid, _s, tok in eng.step_pool():
+            got.setdefault(rid, []).append(tok)
+        if step == 2:   # staggered admission forces a lookahead restart
+            assert eng.admit(1, rng.integers(0, cfg.vocab_size, size=12), 4)
+        hx = eng.hetero
+        if hx.sel_buf is not None:
+            _, _, lengths = hx._sel_inputs
+            sel = np.asarray(jax.block_until_ready(hx.sel_buf))
+            lens = np.asarray(lengths)
+            ok = (sel == -1) | ((sel >= 0) &
+                               (sel * hx.sel.page < lens[None, :, None]))
+            assert ok.all(), "lookahead selected pages beyond the live region"
+    assert len(got[0]) == 6 and len(got[1]) == 4
+    assert eng.hetero.profiler.offload_steps > 0
+
+
+def test_placement_policy_stage_split():
+    """Paper §4/§5.2: memory-bound index stages offload, the KV-touching
+    apply and the compute-dense rest stay on the main device."""
+    cfg = get_arch("llama3.2-1b")
+    plan = plan_stage_placement(cfg, cfg.memory, context=65536)
+    assert plan.stages["relevancy"] == "offload"
+    assert plan.stages["retrieve"] == "offload"
+    assert plan.stages["apply"] == "main"       # reads raw KV pages
+    assert plan.stages["rest"] == "main"        # compute-dense remainder
+    assert plan.memory_bound["retrieve"]
+    # methods that must not offload anything (paper §4 for ttt)
+    assert offload_stages("ttt") == ()
+    assert offload_stages("memagent") == ()
+    assert offload_stages("none") == ()
+    assert "relevancy" in offload_stages("rag")
+
+
+def test_dynamic_fallback_window():
+    """Host-side fallback mirror: outside [min_context, fallback_context]
+    the executor must run single-device (matching the traced cond)."""
+    mem = get_arch("llama3.2-1b").memory
+    assert dynamic_mode(mem.min_context - 1, mem) == "local"
+    assert dynamic_mode(mem.min_context, mem) == "offload"
+    assert dynamic_mode(mem.fallback_context, mem) == "offload"
+    assert dynamic_mode(mem.fallback_context + 1, mem) == "local"
+    assert dynamic_mode(65536, mem.replace(method="ttt")) == "local"
+    main, off = pick_devices()
+    assert main is not None and off is not None
+
+
+def test_dynamic_fallback_serves_below_min_context(setup):
+    """With min_context above the workload, every step takes the local
+    (dense, single-device) path — and still bit-matches across schedules."""
+    cfg, params = setup
+    mem = cfg.memory.replace(method="dsa", min_context=1 << 16)
+    streams = {}
+    for mode in ("sync", "overlap"):
+        sc = ServeConfig(max_len=64, n_slots=2, method="dsa", tp=4, page=8,
+                         kv_page_size=16, offload=mode)
+        eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0), mem=mem)
+        rng = np.random.default_rng(9)
+        assert eng.admit(0, rng.integers(0, cfg.vocab_size, size=16), 4)
+        streams[mode] = _drain(eng, 5)
+        assert eng.hetero.profiler.local_steps > 0
+        assert eng.hetero.profiler.offload_steps == 0
+    np.testing.assert_array_equal(streams["sync"][0], streams["overlap"][0])
