@@ -1,0 +1,110 @@
+"""Serving-integrated retrieval: trigger-to-splice latency + decode impact.
+
+For dynamic RAG (and a MaC flavor), serve the same pooled-decode workload
+with always-firing FLARE triggers through the three retrieval schedules:
+
+  inline   — service on the main device, resolved at the trigger step
+             (the stop-retrieve-resume baseline);
+  sync     — service on the offload device, serialized (what moving the
+             corpus off the generator costs without overlap);
+  overlap  — the subsystem's point: the corpus/bank scoring runs on the
+             retrieval device UNDER the other slots' decode step.
+
+Reported per mode: mean trigger-to-splice wall latency, per-step decode
+wall time, tokens/s, and the exchange ledger (query/ids vs doc-span
+bytes). Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=2``
+to give the retrieval stages a real second device.
+
+Direct invocation (CI smoke): ``python benchmarks/bench_retrieval.py
+--smoke``.
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_cfg, pick, record_result, row
+from repro.core.methods.mac import MacConfig
+from repro.data import build_corpus
+from repro.models import init_params
+from repro.retrieval import RetrievalConfig
+from repro.serving import Engine, ServeConfig
+
+
+def _serve(cfg, params, corpus, kind, mode, *, prompt_len, steps, n_slots):
+    kw = dict(kind=kind, mode=mode, trigger="flare", tau=1.1,
+              min_interval=pick(8, 1), max_retrievals=4, query_window=8)
+    if kind == "rag":
+        kw.update(corpus=corpus, k=2)
+    else:
+        kw.update(mac=MacConfig(segment_len=16, memory_slots=8,
+                                retrieve_k=2))
+    sc = ServeConfig(max_len=prompt_len + steps + 96, n_slots=n_slots,
+                     method="none", tp=4, kv_page_size=16,
+                     retrieval=RetrievalConfig(**kw))
+    eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    reqs = [(i, rng.integers(0, cfg.vocab_size, size=prompt_len)
+             .astype(np.int32), steps) for i in range(n_slots)]
+    assert all(eng.admit_many(reqs))
+    for _ in range(2):                       # compile warm-up
+        if eng.has_prefill_work():
+            eng.prefill_step()
+        eng.step_pool()
+    t0 = time.perf_counter()
+    emitted, hops = 0, 0
+    while emitted < n_slots * steps and hops < 40 * steps:
+        if eng.has_prefill_work():
+            eng.prefill_step()
+        emitted += len(eng.step_pool())
+        hops += 1
+    wall = time.perf_counter() - t0
+    return eng, wall / max(hops, 1), emitted / max(wall, 1e-9)
+
+
+def run():
+    cfg = bench_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
+    corpus = build_corpus(pick(4096, 128), retrieval_vocab=512,
+                          doc_max=16, gen_vocab=cfg.vocab_size, seed=0)
+    prompt_len = pick(96, 24)
+    steps = pick(24, 6)
+    n_slots = pick(4, 2)
+    for kind in ("rag", "mac"):
+        lat = {}
+        for mode in ("inline", "sync", "overlap"):
+            eng, per_step, tps = _serve(cfg, params, corpus, kind, mode,
+                                        prompt_len=prompt_len, steps=steps,
+                                        n_slots=n_slots)
+            rep = eng.retrieval.report()
+            lat[mode] = rep["trigger_to_splice_s"]["mean"]
+            yield row(f"retrieval_{kind}_{mode}", per_step,
+                      f"trig2splice={1e6 * lat[mode]:.0f}us "
+                      f"n={rep['retrievals']}")
+            record_result("retrieval", f"{kind}_{mode}", {
+                "us_per_step": 1e6 * per_step,
+                "tokens_per_s": tps,
+                "trigger_to_splice_us": 1e6 * lat[mode],
+                "retrievals": rep["retrievals"],
+                "spliced_tokens": rep["spliced_tokens"],
+                "transfer": rep["transfer"],
+                "devices": jax.device_count(),
+            })
+        yield row(f"retrieval_{kind}_overlap_vs_sync", lat["overlap"],
+                  f"latency_ratio={lat['overlap'] / max(lat['sync'], 1e-12):.2f}x")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks import common
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    common.set_smoke(ap.parse_args().smoke)
+    for r in run():
+        print(r, flush=True)

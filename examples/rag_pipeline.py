@@ -1,9 +1,14 @@
-"""RAG memory-processing pipeline over a synthetic Zipf corpus: single-stage
-BM25 (DRAGIN/FLARE/FS-RAG style, fused Pallas score+top-k) and two-stage
-hybrid retrieval + cross-encoder reranking (paper Table 1 rows 4-6), with
-dynamic retrieval triggers over generator logits.
+"""Dynamic RAG through the serving-integrated retrieval subsystem.
+
+The corpus lives in a ``RetrievalService`` (the retrieval engine): fused
+BM25 scoring runs on the device hosting the index, documents are appended
+incrementally without re-jitting, and at serve time per-slot FLARE triggers
+splice retrieved documents into the paged KV pool mid-decode — overlapped
+against the other slots' decode steps.
 
     PYTHONPATH=src python examples/rag_pipeline.py --docs 2048
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+        PYTHONPATH=src python examples/rag_pipeline.py --mode overlap
 """
 import argparse
 import os
@@ -13,67 +18,73 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
 from repro.core.methods import rag
 from repro.data import build_corpus, sample_queries
-from repro.models import init_params, layers as L, model as M
+from repro.models import init_params
+from repro.retrieval import RetrievalConfig, RetrievalService
+from repro.serving import Engine, ServeConfig, Scheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=2048)
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--mode", default="overlap",
+                    choices=["inline", "sync", "overlap"])
     args = ap.parse_args()
 
-    corpus = build_corpus(args.docs, retrieval_vocab=1024, doc_max=32,
-                          gen_vocab=512, embed_dim=32, seed=0)
-    print(f"corpus: {corpus.n_docs} docs, avgdl={corpus.avgdl:.1f}")
-    q_terms = sample_queries(corpus, args.batch, 8, seed=1)
-
-    # --- single-stage BM25 (fused kernel) ---
-    t0 = time.perf_counter()
-    scores, ids = rag.bm25_retrieve(corpus, q_terms, k=args.k, fused=True)
-    jax.block_until_ready(ids)
-    print(f"single-stage BM25: top-{args.k} in {time.perf_counter()-t0:.3f}s; "
-          f"top doc ids {np.asarray(ids[:, 0])}")
-
-    # --- two-stage: hybrid first pass + tiny cross-encoder reranker ---
     cfg = get_arch("llama3.2-1b").smoke()
-    reranker = init_params(cfg, jax.random.PRNGKey(3), tp=4)
 
-    def score_fn(query_tokens, docs):
-        B, N, D = docs.shape
-        pairs = jnp.concatenate(
-            [jnp.repeat(query_tokens[:, None], N, 1), docs], axis=-1)
-        flat = pairs.reshape(B * N, -1) % cfg.vocab_size
-        h, _, _ = M.forward(reranker, cfg, flat, tp=4)
-        pooled = h.mean(axis=1).astype(jnp.float32)
-        return (pooled @ reranker["lm_head"]["w"][:, 0].astype(
-            jnp.float32)).reshape(B, N)
-
-    q_emb = jnp.ones((args.batch, 32), jnp.float32) / np.sqrt(32)
+    # --- the document-memory service: fused BM25 on the hosting device ---
+    half = args.docs // 2
+    corpus = build_corpus(args.docs, retrieval_vocab=1024, doc_max=16,
+                          gen_vocab=cfg.vocab_size, embed_dim=32, seed=0)
+    svc = RetrievalService(rag.corpus_slice(corpus, 0, half), k=args.k)
+    q_terms = np.asarray(sample_queries(corpus, args.batch, 8, seed=1))
     t0 = time.perf_counter()
-    _, cand = rag.hybrid_retrieve(corpus, q_terms, q_emb, n_first=32)
-    top, ids2 = rag.rerank(jax.jit(score_fn), corpus, q_terms, cand, k=args.k)
-    jax.block_until_ready(ids2)
-    print(f"two-stage (hybrid + reranker): {time.perf_counter()-t0:.3f}s; "
-          f"reranked ids {np.asarray(ids2[:, 0])}")
+    ids, spans = svc.collect(svc.query(q_terms))
+    print(f"service: {svc.n_docs} docs, top-{args.k} in "
+          f"{time.perf_counter() - t0:.3f}s; top ids {ids[:, 0]}")
 
-    # --- apply-to-inference: append docs, prefill the generator ---
-    query_tokens = (q_terms % cfg.vocab_size).astype(jnp.int32)
-    augmented = rag.append_to_query(corpus, query_tokens, ids[:, :2],
-                                    max_len=128)
-    gen = init_params(cfg, jax.random.PRNGKey(4), tp=4)
-    logits, _ = jax.jit(lambda p, t: M.prefill(p, cfg, t, tp=4))(
-        gen, augmented % cfg.vocab_size)
-    # dynamic triggers decide whether to retrieve again (DRAGIN/FLARE)
-    flare = rag.flare_trigger(logits, tau=0.4)
-    print(f"augmented prompt len={augmented.shape[1]}, "
-          f"FLARE would re-retrieve for {int(flare.sum())}/{args.batch} seqs")
+    # --- incremental ingest: the second half appends without re-jitting ---
+    t0 = time.perf_counter()
+    svc.ingest(rag.corpus_slice(corpus, half, args.docs))
+    ids2, _ = svc.collect(svc.query(q_terms))
+    print(f"ingest +{args.docs - half} docs in {time.perf_counter()-t0:.3f}s "
+          f"-> {svc.n_docs} docs; top ids now {ids2[:, 0]}")
+
+    # --- two-stage first pass: hybrid BM25+embedding scoring on-store ---
+    q_emb = np.ones((args.batch, 32), np.float32) / np.sqrt(32)
+    _, cand = svc.query_hybrid(q_terms, q_emb, n_first=16)
+    print(f"hybrid first-pass candidates: {np.asarray(cand[:, :4])}...")
+
+    # --- serve time: FLARE triggers splice docs mid-decode ---------------
+    params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
+    rcfg = RetrievalConfig(kind="rag", mode=args.mode, corpus=corpus,
+                           k=2, trigger="flare", tau=0.9,
+                           min_interval=4, max_retrievals=2)
+    eng = Engine(cfg, params,
+                 ServeConfig(max_len=256, n_slots=args.batch,
+                             method="none", tp=4, retrieval=rcfg),
+                 key=jax.random.PRNGKey(1))
+    sch = Scheduler(eng)
+    rng = np.random.default_rng(0)
+    for _ in range(args.batch):
+        sch.submit(rng.integers(0, cfg.vocab_size, size=24), max_new=16)
+    t0 = time.perf_counter()
+    done = sch.run()
+    rep = eng.retrieval.report()
+    toks = sum(len(r.tokens) for r in done.values())
+    print(f"served {len(done)} requests ({toks} tokens) in "
+          f"{time.perf_counter() - t0:.2f}s, mode={args.mode}: "
+          f"{rep['retrievals']} retrievals, "
+          f"{rep['spliced_tokens']} doc tokens spliced, "
+          f"trigger-to-splice {1e3 * rep['trigger_to_splice_s']['mean']:.1f}ms "
+          f"(devices: {rep['devices']})")
 
 
 if __name__ == "__main__":

@@ -110,18 +110,25 @@ def segment_step(mp: Params, bank_state: Dict, segment_embeds: jnp.ndarray,
 
 
 def build_pipeline(mp: Params, mc: MacConfig) -> MemoryPipeline:
+    """Stage descriptor over M = (segment_hidden, bank_state), x = segment
+    embeddings. The relevancy stage computes the bank scores ONCE and the
+    retrieve stage consumes them (S flows between stages per Definition
+    3.1), so the Fig.-3 stage profiler attributes score time to relevancy
+    and only the gather to retrieve."""
+
     def prepare(M):
         hidden, bank_state = M
-        return prepare_memory(mp, hidden)
+        # new segment memory for the post-step push; the bank rides along
+        # so relevancy can score against it
+        return (prepare_memory(mp, hidden), bank_state)
 
     def relevancy(I, seg):
-        return ("q", I, seg)
+        _, bank_state = I
+        return compute_relevancy(mp, seg, bank_state["bank"])
 
     def retrieve_stage(M, S):
-        _, mem_emb, seg = S
-        hidden, bank_state = M
-        scores = compute_relevancy(mp, seg, bank_state["bank"])
-        return retrieve(bank_state["bank"], scores, bank_state["count"], mc)
+        _, bank_state = M
+        return retrieve(bank_state["bank"], S, bank_state["count"], mc)
 
     def apply(got, seg):
         return jnp.concatenate([got.astype(seg.dtype), seg], axis=1)

@@ -52,6 +52,29 @@ class Corpus:
         return float(jnp.mean(self.doc_len))
 
 
+def idf_from_df(df, n_docs):
+    """BM25 idf from document frequencies (the one smoothing formula —
+    shared by corpus building, slicing, and the serving store's running
+    refresh)."""
+    nf = jnp.asarray(n_docs).astype(jnp.float32)
+    dff = jnp.asarray(df).astype(jnp.float32)
+    return jnp.log((nf - dff + 0.5) / (dff + 0.5) + 1.0)
+
+
+def corpus_slice(corpus: Corpus, lo: int, hi: int) -> Corpus:
+    """Row slice [lo, hi) as a standalone Corpus — the unit of incremental
+    ingest into the serving-side ``retrieval.RetrievalService`` (its store
+    recomputes df/idf over the running corpus, so the slice's own idf is
+    only a local best-effort)."""
+    tf = corpus.tf[lo:hi]
+    idf = idf_from_df((tf > 0).sum(axis=0), tf.shape[0])
+    return Corpus(
+        tf=tf, doc_len=corpus.doc_len[lo:hi], idf=idf,
+        doc_tokens=corpus.doc_tokens[lo:hi],
+        doc_embeds=None if corpus.doc_embeds is None
+        else corpus.doc_embeds[lo:hi])
+
+
 def gather_term_panel(corpus: Corpus, query_terms: jnp.ndarray):
     """query_terms [B, T] -> (tf_panel [B, D, T], idf [B, T]).
 

@@ -82,6 +82,13 @@ class HeteroExecutor:
         self._span_jits: Dict[Tuple[int, int], callable] = {}
         self._apply_jits: Dict[int, callable] = {}
 
+    @property
+    def devices(self) -> Tuple:
+        """(main, offload) — shared with co-resident services (the
+        retrieval subsystem places its corpus/banks on the same offload
+        device so one two-device environment hosts both)."""
+        return self.main_dev, self.off_dev
+
     # ------------------------------------------------------------------
     # jit builders
     # ------------------------------------------------------------------

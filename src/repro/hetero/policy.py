@@ -84,6 +84,16 @@ def resolve_cli_offload(value: str, method: str) -> str:
     return mode
 
 
+def resolve_cli_retrieval(value: str) -> str:
+    """Map ``--retrieval off|on|inline|sync|overlap`` to a
+    ``retrieval.RetrievalConfig.mode`` ('on' = the overlapped service;
+    'off' returns '' meaning no retrieval service)."""
+    mode = {"on": "overlap", "off": ""}.get(value, value)
+    if mode and mode not in ("inline", "sync", "overlap"):
+        raise ValueError(f"unknown retrieval mode {value!r}")
+    return mode
+
+
 def pick_devices():
     """(main, offload) JAX devices.
 

@@ -249,14 +249,26 @@ def _lserve(cfg: ArchConfig, mem: MemoryConfig, n_slots: int,
 
 
 def make_offload_select(method: str, cfg: ArchConfig, mem: MemoryConfig, *,
-                        dsa_page: int, n_slots: int,
-                        max_len: int) -> OffloadSelect:
+                        dsa_page: int, n_slots: int, max_len: int,
+                        corpus=None, mac=None, rag_k: int = 4,
+                        capacity: int = 0) -> OffloadSelect:
+    """One bundle per OFFLOAD_STAGES declarer. The sparse-attention family
+    (dsa/seer/lserve) keeps KV-page summaries; the document-memory family
+    (rag/mac, built in ``repro.retrieval.select``) keeps the corpus index /
+    per-slot memory banks — same protocol, different state. ``corpus`` /
+    ``mac`` configure the retrieval-family builders and are ignored by the
+    sparse ones."""
     builders: Dict[str, Callable] = {
         "dsa": lambda: _dsa(cfg, mem, dsa_page, n_slots, max_len),
         "seer": lambda: _seer(cfg, mem, n_slots, max_len),
         "lserve": lambda: _lserve(cfg, mem, n_slots, max_len),
     }
+    if method in ("rag", "mac"):
+        from repro.retrieval.select import make_retrieval_select
+        return make_retrieval_select(method, cfg, n_slots=n_slots,
+                                     corpus=corpus, mac=mac, k=rag_k,
+                                     capacity=capacity)
     if method not in builders:
         raise KeyError(f"method {method!r} has no offload-side selection: "
-                       f"{sorted(builders)}")
+                       f"{sorted(builders) + ['rag', 'mac']}")
     return builders[method]()

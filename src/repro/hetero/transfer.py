@@ -30,6 +30,7 @@ class TransferLedger:
         self.down_bytes = 0      # per-step index maintenance (q + new keys)
         self.bulk_bytes = 0      # admission-time prompt key shipping
         self.up_bytes = 0        # selection indices coming back
+        self.span_bytes = 0      # retrieved doc-token / embedding payloads
         self.steps = 0
 
     # -- counted device_put wrappers -----------------------------------
@@ -43,8 +44,15 @@ class TransferLedger:
         return jax.device_put(tree, device)
 
     def ship_up(self, tree, device):
-        self.up_bytes += tree.size * tree.dtype.itemsize
+        self.up_bytes += pytree_bytes(tree)
         return jax.device_put(tree, device)
+
+    def count_span(self, nbytes: int):
+        """Retrieved-document payload returned by the retrieval engine
+        (token spans / MaC embeddings) — the part of the ``up`` exchange
+        that is data, not indices; tracked separately so the index-only
+        comparison stays honest."""
+        self.span_bytes += int(nbytes)
 
     def tick(self):
         self.steps += 1
@@ -66,6 +74,7 @@ class TransferLedger:
             "down_bytes": int(self.down_bytes),
             "bulk_prefill_bytes": int(self.bulk_bytes),
             "up_bytes": int(self.up_bytes),
+            "span_bytes": int(self.span_bytes),
             "steps": int(self.steps),
         }
         if self.steps:

@@ -5,20 +5,27 @@ TPU adaptation (DESIGN.md §2): BM25's irregular per-term histogram lookups are
 hoisted OUT of the kernel — the data pipeline gathers the query's term-
 frequency columns once into a dense [D, T] panel — while the streaming
 score + top-k stays fused in VMEM, mirroring the FPGA dataflow engine.
+
+The live document count is a SCALAR-PREFETCH operand (same idiom as the
+paged sparse-decode kernel), not a static trace constant: the serving-side
+corpus store appends documents incrementally and must not re-jit the
+retrieval path every time the corpus grows.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.bitonic import bitonic_topk
 
 
-def _kernel(tf_ref, dl_ref, idf_ref, vals_ref, idx_ref,
-            *, k1: float, b: float, avgdl: float, bd: int, c: int, n_docs: int):
+def _kernel(nd_ref, tf_ref, dl_ref, idf_ref, vals_ref, idx_ref,
+            *, k1: float, b: float, avgdl: float, bd: int, c: int):
     j = pl.program_id(1)
     tf = tf_ref[0].astype(jnp.float32)        # [bd, T]
     dl = dl_ref[0].astype(jnp.float32)        # [bd]
@@ -26,7 +33,7 @@ def _kernel(tf_ref, dl_ref, idf_ref, vals_ref, idx_ref,
     denom = tf + k1 * (1.0 - b + b * dl[:, None] / avgdl)
     scores = (tf * (k1 + 1.0) / denom) @ idf  # [bd]
     idx = j * bd + jax.lax.iota(jnp.int32, bd)
-    scores = jnp.where(idx < n_docs, scores, -jnp.inf)
+    scores = jnp.where(idx < nd_ref[0], scores, -jnp.inf)
     top_v, top_pos = bitonic_topk(scores[None, :],
                                   jax.lax.iota(jnp.int32, bd)[None, :], c)
     vals_ref[0, 0] = top_v[0]
@@ -35,7 +42,7 @@ def _kernel(tf_ref, dl_ref, idf_ref, vals_ref, idx_ref,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block", "c", "k1", "b", "avgdl", "valid", "interpret"),
+    static_argnames=("block", "c", "k1", "b", "avgdl", "interpret"),
 )
 def bm25_topk_candidates(
     tf: jnp.ndarray,       # [B, D, T] term frequencies (query's terms only)
@@ -47,8 +54,8 @@ def bm25_topk_candidates(
     k1: float = 1.5,
     b: float = 0.75,
     avgdl: float = 100.0,
-    valid: int = 0,        # 0 -> D; real doc count when padded
-    interpret: bool = True,
+    valid=0,               # live doc count (traced ok); 0 -> D
+    interpret: Optional[bool] = None,  # None -> backend-aware (CPU only)
 ):
     """Per-block BM25 top-c candidates: (vals [B,nb,c], idx [B,nb,c])."""
     B, D, T = tf.shape
@@ -56,23 +63,30 @@ def bm25_topk_candidates(
     assert D % block == 0
     nb = D // block
     c = min(c, block)
-    kern = functools.partial(_kernel, k1=k1, b=b, avgdl=avgdl, bd=block, c=c,
-                             n_docs=valid or D)
-    return pl.pallas_call(
-        kern,
+    if interpret is None:  # match ops._interp(): compile via Mosaic off-CPU
+        interpret = jax.default_backend() == "cpu"
+    nd = jnp.asarray(valid, jnp.int32)
+    nd = jnp.where(nd > 0, nd, D).reshape(1)
+    kern = functools.partial(_kernel, k1=k1, b=b, avgdl=avgdl, bd=block, c=c)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(B, nb),
         in_specs=[
-            pl.BlockSpec((1, block, T), lambda bi, j: (bi, j, 0)),
-            pl.BlockSpec((1, block), lambda bi, j: (bi, j)),
-            pl.BlockSpec((1, T), lambda bi, j: (bi, 0)),
+            pl.BlockSpec((1, block, T), lambda bi, j, nd: (bi, j, 0)),
+            pl.BlockSpec((1, block), lambda bi, j, nd: (bi, j)),
+            pl.BlockSpec((1, T), lambda bi, j, nd: (bi, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, c), lambda bi, j: (bi, j, 0)),
-            pl.BlockSpec((1, 1, c), lambda bi, j: (bi, j, 0)),
+            pl.BlockSpec((1, 1, c), lambda bi, j, nd: (bi, j, 0)),
+            pl.BlockSpec((1, 1, c), lambda bi, j, nd: (bi, j, 0)),
         ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((B, nb, c), jnp.float32),
             jax.ShapeDtypeStruct((B, nb, c), jnp.int32),
         ],
         interpret=interpret,
-    )(tf, doc_len, idf)
+    )(nd, tf, doc_len, idf)

@@ -91,10 +91,18 @@ def page_minmax(k_cache, *, page_size: int = 64):
 
 
 def bm25_topk(tf, doc_len, idf, k: int, *, block: int = 4096, c: int = 0,
-              k1: float = 1.5, b: float = 0.75, avgdl: float = 100.0):
-    if not _STATE["pallas"]:
-        return ref.bm25_topk(tf, doc_len, idf, k, k1=k1, b=b, avgdl=avgdl)
+              k1: float = 1.5, b: float = 0.75, avgdl: float = 100.0,
+              valid=None):
+    """Fused BM25 score + top-k. ``valid`` restricts scoring to the first
+    ``valid`` documents (traced ok — the serving corpus store passes its
+    live doc count so ingest never re-jits); None scores all D docs."""
     B, D, T = tf.shape
+    if not _STATE["pallas"]:
+        if valid is None:
+            return ref.bm25_topk(tf, doc_len, idf, k, k1=k1, b=b, avgdl=avgdl)
+        scores = ref.bm25_scores(tf, doc_len, idf, k1=k1, b=b, avgdl=avgdl)
+        scores = jnp.where(jnp.arange(D)[None] < valid, scores, -jnp.inf)
+        return jax.lax.top_k(scores, min(k, D))
     blk = _pow2_block(max(D, 2), block)
     pad = (-D) % blk
     if pad:
@@ -103,5 +111,5 @@ def bm25_topk(tf, doc_len, idf, k: int, *, block: int = 4096, c: int = 0,
     c = c or min(k, blk)
     vals, idx = _bm.bm25_topk_candidates(
         tf, doc_len, idf, block=blk, c=c, k1=k1, b=b, avgdl=avgdl,
-        valid=D, interpret=_interp())
+        valid=D if valid is None else valid, interpret=_interp())
     return _rt.merge_candidates(vals, idx, min(k, D))

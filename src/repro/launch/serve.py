@@ -13,6 +13,11 @@ exercised either way).
 lookahead selection on a second device, src/repro/hetero) and prints its
 per-stage overhead breakdown; launch with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` for a real split.
+
+``--retrieval on`` enables the document-memory service (src/repro/retrieval):
+per-slot FLARE triggers over the decode logits, retrieved documents (or MaC
+memory embeddings with ``--retrieval-kind mac``) spliced into the paged pool
+overlapped against decode. Composes with ``--offload``.
 """
 from __future__ import annotations
 
@@ -42,10 +47,18 @@ def main(argv=None):
     ap.add_argument("--offload", default="off",
                     choices=["on", "off", "sync", "overlap"],
                     help="hetero offload executor (on = overlap)")
+    ap.add_argument("--retrieval", default="off",
+                    choices=["on", "off", "inline", "sync", "overlap"],
+                    help="document-memory service (on = overlap)")
+    ap.add_argument("--retrieval-kind", default="rag",
+                    choices=["rag", "mac"])
+    ap.add_argument("--docs", type=int, default=2048,
+                    help="synthetic corpus size for --retrieval-kind rag")
     args = ap.parse_args(argv)
-    from repro.hetero import resolve_cli_offload
+    from repro.hetero import resolve_cli_offload, resolve_cli_retrieval
     try:
         offload = resolve_cli_offload(args.offload, args.method)
+        ret_mode = resolve_cli_retrieval(args.retrieval)
     except ValueError as e:
         ap.error(str(e))
 
@@ -57,10 +70,28 @@ def main(argv=None):
         pre, dec = split_mesh_roles(mesh)
         print(f"disaggregated roles: prefill={pre.devices.size} devices, "
               f"decode={dec.devices.size} devices")
+    retrieval = None
+    if ret_mode:
+        from repro.core.methods.mac import MacConfig
+        from repro.retrieval import RetrievalConfig
+        if args.retrieval_kind == "rag":
+            from repro.data import build_corpus
+            corpus = build_corpus(args.docs, retrieval_vocab=1024,
+                                  doc_max=16, gen_vocab=cfg.vocab_size,
+                                  seed=0)
+            retrieval = RetrievalConfig(kind="rag", mode=ret_mode,
+                                        corpus=corpus, k=2,
+                                        min_interval=4, max_retrievals=2)
+        else:
+            retrieval = RetrievalConfig(
+                kind="mac", mode=ret_mode, min_interval=4, max_retrievals=2,
+                mac=MacConfig(segment_len=16, memory_slots=8, retrieve_k=2))
+    extra = 96 if retrieval is not None else 16
     eng = Engine(cfg, params,
-                 ServeConfig(max_len=args.prompt_len + args.max_new + 16,
+                 ServeConfig(max_len=args.prompt_len + args.max_new + extra,
                              n_slots=args.slots, method=args.method,
-                             tp=args.tp, page=8, offload=offload),
+                             tp=args.tp, page=8, offload=offload,
+                             retrieval=retrieval),
                  key=jax.random.PRNGKey(1))
     sch = Scheduler(eng)
     rng = np.random.default_rng(0)
@@ -71,12 +102,16 @@ def main(argv=None):
     done = sch.run()
     wall = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in done.values())
-    print(f"method={args.method} offload={offload}: "
+    print(f"method={args.method} offload={offload} "
+          f"retrieval={ret_mode or 'off'}: "
           f"{len(done)}/{args.requests} requests, "
           f"{toks} tokens, {toks / wall:.1f} tok/s")
     if eng.hetero is not None:
         print("hetero per-stage breakdown (Fig. 3 style):")
         print(json.dumps(eng.hetero.report(), indent=2, sort_keys=True))
+    if eng.retrieval is not None:
+        print("retrieval service report:")
+        print(json.dumps(eng.retrieval.report(), indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

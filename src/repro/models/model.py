@@ -615,7 +615,8 @@ def decode_step_paged_presel(params, cfg: ArchConfig, token, pool, live,
 
 
 def extend_paged(params, cfg: ArchConfig, tokens, pool, n_valid, *,
-                 tp: int = 16, collect_kq: bool = False):
+                 tp: int = 16, collect_kq: bool = False, x_embeds=None,
+                 emb_rows=None):
     """Chunked prefill: append a span of C tokens per slot to the paged pool.
 
     tokens [B, C] int32 (rows padded past ``n_valid[b]``); pool from
@@ -630,6 +631,11 @@ def extend_paged(params, cfg: ArchConfig, tokens, pool, n_valid, *,
     device-resident memory index coherent with the pool.
     ``decode_step_paged`` is the C=1 specialization of this, kept separate
     so the decode path can thread the sparse-method fallback.
+
+    ``x_embeds [B, C, d]`` + ``emb_rows [B]`` feed rows with PRE-EMBEDDED
+    context instead of token ids: the MaC retrieval service splices
+    retrieved memory embeddings into a slot's context through the exact
+    same chunked path its documents would take.
     """
     from repro.kernels.page_pool import pool_gather, pool_scatter_span
 
@@ -637,6 +643,8 @@ def extend_paged(params, cfg: ArchConfig, tokens, pool, n_valid, *,
     lengths = pool["lengths"]
     table = pool["page_table"]
     x = L.embed(params["embed"], tokens)
+    if x_embeds is not None:
+        x = jnp.where(emb_rows[:, None, None], x_embeds.astype(x.dtype), x)
     positions = lengths[:, None] + jnp.arange(C)[None, :]  # [B, C]
     positions3 = None
     if cfg.rope_style == "mrope":

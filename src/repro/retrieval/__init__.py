@@ -1,0 +1,19 @@
+"""Serving-integrated retrieval subsystem (paper Table 1 rows 4-6 and 8).
+
+Dynamic RAG and MaC memory banks as a first-class engine service: the
+document memory (corpus index / per-slot banks) lives on the retrieval
+device, FLARE/DRAGIN triggers fire per slot over the pooled decode logits,
+and retrieved payloads are spliced into the paged KV pool through the
+chunked-prefill path — overlapped against decode of the other slots under
+``RetrievalConfig(mode="overlap")``, bit-matching the inline synchronous
+stop-retrieve-resume schedule.
+"""
+from repro.retrieval.bank import MacBankService
+from repro.retrieval.executor import RetrievalConfig, RetrievalExecutor
+from repro.retrieval.select import make_retrieval_select, rag_hybrid_scores
+from repro.retrieval.service import RetrievalService
+
+__all__ = [
+    "MacBankService", "RetrievalConfig", "RetrievalExecutor",
+    "RetrievalService", "make_retrieval_select", "rag_hybrid_scores",
+]

@@ -1,0 +1,94 @@
+"""Per-slot MaC memory-bank service (paper Table 1 row 8, Fig. 6c).
+
+The banks — FIFO segment-summary embeddings per serving slot — live on the
+retrieval device together with the token-embedding table and the MaC
+projection weights, so the whole prepare / relevancy / retrieve side runs
+there: segment pushes ship only the segment's TOKEN IDS down, relevancy
+queries ship only a token window down, and only the ``[r, d]`` retrieved
+embeddings come back (spliced into the generator's context by the engine).
+
+Segment summaries are Titans-style projections of the segment's token
+embeddings (``mac.prepare_memory`` over ``L.embed`` rows): a pure function
+of the slot's token stream, which is what makes the overlapped serving
+schedule bit-match its synchronous counterpart.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.methods.mac import MacConfig, mac_init
+from repro.hetero.transfer import TransferLedger
+from repro.retrieval.select import make_retrieval_select
+
+
+class MacBankService:
+    def __init__(self, cfg: ArchConfig, mc: MacConfig, n_slots: int,
+                 embed_params, *, key=None, device=None,
+                 ledger: Optional[TransferLedger] = None):
+        self.cfg, self.mc, self.n_slots = cfg, mc, n_slots
+        self.device = device or jax.devices()[0]
+        self.ledger = ledger or TransferLedger()
+        self.sel = make_retrieval_select("mac", cfg, n_slots=n_slots, mac=mc)
+        self.sp = jax.device_put(
+            {"embed": embed_params,
+             "mac": mac_init(key if key is not None else jax.random.PRNGKey(0),
+                             cfg)},
+            self.device)
+        self.state = jax.device_put(self.sel.summary_init(), self.device)
+        self._reset_jit = jax.jit(self.sel.reset)
+        self._ingest_jit = jax.jit(self.sel.ingest)
+        self._select_jit = jax.jit(self.sel.select)
+        # host mirror of per-slot bank occupancy (trigger gating)
+        self.counts = np.zeros((n_slots,), np.int32)
+
+    def reset(self, slots) -> None:
+        sid = jax.device_put(jnp.asarray(slots, jnp.int32), self.device)
+        self.state = self._reset_jit(self.state, sid)
+        self.counts[np.asarray(slots)] = 0
+
+    def push(self, slot: int, seg_tokens: np.ndarray) -> None:
+        """FIFO-push the summary of one segment's tokens into ``slot``'s
+        bank (prepare stage, on-device; async dispatch)."""
+        toks = self.ledger.ship_down(
+            jnp.asarray(seg_tokens, jnp.int32), self.device)
+        self.state = self._ingest_jit(
+            self.state, self.sp, jnp.asarray(slot, jnp.int32), toks)
+        self.counts[slot] = min(self.counts[slot] + 1, self.mc.memory_slots)
+
+    def query(self, slot: int, q_tokens: np.ndarray) -> Dict:
+        """Launch relevancy + retrieve for ``slot`` from a token window
+        (async — collect with ``collect``)."""
+        toks = self.ledger.ship_down(
+            jnp.asarray(q_tokens, jnp.int32), self.device)
+        state = self.state
+        idx, embeds = self._select_jit(self.sp, state,
+                                       toks, jnp.asarray(slot, jnp.int32))
+        return {"ids": idx, "embeds": embeds, "inputs": (state, toks, slot)}
+
+    def collect(self, handle: Dict, device=None
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """Block: -> (idx [r], embeds [r', d]) with invalid picks trimmed."""
+        ids_dev = self.ledger.ship_up(handle["ids"], device or self.device)
+        emb_dev = self.ledger.ship_up(handle["embeds"],
+                                      device or self.device)
+        ids = np.asarray(ids_dev)
+        embeds = np.asarray(emb_dev, np.float32)
+        keep = ids >= 0
+        self.ledger.count_span(embeds[keep].nbytes)
+        return ids[keep], embeds[keep]
+
+    def replay(self, handle: Dict) -> bool:
+        """Re-run the pinned selection synchronously; True iff bit-equal."""
+        state, toks, slot = handle["inputs"]
+        ref_idx, ref_emb = jax.block_until_ready(
+            self._select_jit(self.sp, state, toks,
+                             jnp.asarray(slot, jnp.int32)))
+        return bool(
+            np.array_equal(np.asarray(ref_idx), np.asarray(handle["ids"]))
+            and np.array_equal(np.asarray(ref_emb),
+                               np.asarray(handle["embeds"])))

@@ -1,0 +1,303 @@
+"""Serving-side retrieval executor: dynamic triggers, async queries, splice
+scheduling (the engine-facing face of the retrieval subsystem).
+
+Per decode step the engine hands this executor the pooled decode logits;
+FLARE / DRAGIN triggers fire PER SLOT, and a fired slot's query (a window
+of its recent context tokens) is dispatched to the retrieval device:
+
+  inline   — the service lives on the MAIN device; query resolved
+             synchronously at the trigger step (the stop-retrieve-resume
+             oracle every other mode must bit-match);
+  sync     — service on the OFFLOAD device, still resolved synchronously
+             (the honest serialized baseline);
+  overlap  — async dispatch: the offload device scores the corpus / bank
+             WHILE the main device keeps decoding slots B..Z; the fired
+             slot pauses (it leaves the live mask) and its result is
+             consumed one step later, double-buffered like the PR-2
+             lookahead executor.
+
+The retrieved payload (doc token spans for rag, memory embeddings for mac)
+is spliced into the slot's paged KV context by the ENGINE through the
+chunked-``extend_paged`` path under the scheduler's prefill token budget;
+this module only decides when to fire, runs the queries, and keeps the
+per-slot bookkeeping deterministic so every mode emits identical tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.methods import rag as rag_m
+from repro.core.methods.mac import MacConfig
+from repro.hetero import policy as hpolicy
+from repro.hetero.transfer import TransferLedger
+from repro.retrieval.bank import MacBankService
+from repro.retrieval.service import RetrievalService
+
+MODES = ("inline", "sync", "overlap")
+
+
+@dataclasses.dataclass
+class RetrievalConfig:
+    """``ServeConfig(retrieval=...)`` — the document-memory service knobs."""
+
+    kind: str = "rag"            # rag | mac
+    mode: str = "inline"         # inline | sync | overlap
+    corpus: Any = None           # rag.Corpus (required for kind=rag)
+    k: int = 4                   # docs per retrieval (rag)
+    capacity: int = 0            # corpus arena size (0 = pow2 fit)
+    ingest_block: int = 64       # docs per jitted append
+    mac: Optional[MacConfig] = None   # bank shape (kind=mac)
+    trigger: str = "flare"       # flare | dragin
+    tau: float = 0.4             # trigger threshold
+    query_window: int = 8        # context tokens forming the query
+    min_interval: int = 8        # context growth required between triggers
+    max_retrievals: int = 2      # per request
+    validate: bool = False       # replay every consumed query synchronously
+
+
+class RetrievalExecutor:
+    def __init__(self, cfg: ArchConfig, sc, rcfg: RetrievalConfig, params,
+                 *, key=None, devices=None):
+        assert rcfg.mode in MODES, rcfg.mode
+        assert rcfg.kind in ("rag", "mac"), rcfg.kind
+        self.cfg, self.sc, self.rcfg = cfg, sc, rcfg
+        self.mode = rcfg.mode
+        self.main_dev, self.off_dev = devices or hpolicy.pick_devices()
+        dev = self.main_dev if rcfg.mode == "inline" else self.off_dev
+        self.ledger = TransferLedger()
+        self.service: Optional[RetrievalService] = None
+        self.bank: Optional[MacBankService] = None
+        if rcfg.kind == "rag":
+            assert rcfg.corpus is not None, "kind='rag' needs a corpus"
+            self.service = RetrievalService(
+                rcfg.corpus, k=rcfg.k, device=dev, capacity=rcfg.capacity,
+                ingest_block=rcfg.ingest_block, ledger=self.ledger)
+        else:
+            mc = rcfg.mac or MacConfig()
+            # summaries push at page boundaries: segment = page multiple
+            seg = max(mc.segment_len, sc.kv_page_size)
+            seg = ((seg + sc.kv_page_size - 1)
+                   // sc.kv_page_size) * sc.kv_page_size
+            if seg != mc.segment_len:
+                mc = dataclasses.replace(mc, segment_len=seg)
+            self.mc = mc
+            self.bank = MacBankService(cfg, mc, sc.n_slots, params["embed"],
+                                       key=key, device=dev,
+                                       ledger=self.ledger)
+        n = sc.n_slots
+        self._enabled = np.zeros((n,), bool)
+        self._hist: List[List[int]] = [[] for _ in range(n)]
+        self._pushed = np.zeros((n,), np.int64)    # mac: tokens summarized
+        self._n_ret = np.zeros((n,), np.int32)
+        self._last_len = np.zeros((n,), np.int64)  # context len @ last fire
+        self._waiting = np.zeros((n,), bool)
+        self._inflight: Dict[int, Dict] = {}       # slot -> handle + age
+        self.events: List[Dict] = []
+        self.suppressed = 0
+
+    # ------------------------------------------------------------------
+    # slot lifecycle (engine hooks)
+    # ------------------------------------------------------------------
+
+    def on_admit(self, slot: int, prompt: np.ndarray,
+                 enabled: Optional[bool]) -> None:
+        assert slot not in self._inflight
+        self._enabled[slot] = True if enabled is None else bool(enabled)
+        self._hist[slot] = [int(t) for t in np.asarray(prompt)]
+        self._pushed[slot] = 0
+        self._n_ret[slot] = 0
+        self._last_len[slot] = len(self._hist[slot])
+        self._waiting[slot] = False
+        if self.bank is not None:
+            self.bank.reset([slot])
+            if self._enabled[slot]:
+                self._push_segments(slot)
+
+    def on_release(self, slot: int) -> None:
+        assert slot not in self._inflight, "released slot mid-retrieval"
+        self._enabled[slot] = False
+        self._hist[slot] = []
+        self._waiting[slot] = False
+        if self.bank is not None:
+            self.bank.reset([slot])
+
+    def note_token(self, slot: int, tok: int) -> None:
+        """One decode token fed to ``slot`` (entered its KV context)."""
+        self._hist[slot].append(int(tok))
+        if self.bank is not None and self._enabled[slot]:
+            self._push_segments(slot)
+
+    def note_splice(self, slot: int, payload) -> None:
+        """Retrieved payload queued into the slot's context: doc tokens for
+        rag, ``n`` placeholder rows for mac embeddings (the context history
+        tracks positions; embedding rows have no token ids)."""
+        if isinstance(payload, (int, np.integer)):
+            self._hist[slot].extend([0] * int(payload))
+        else:
+            self._hist[slot].extend(int(t) for t in np.asarray(payload))
+        self._last_len[slot] = len(self._hist[slot])
+        if self.bank is not None and self._enabled[slot]:
+            self._push_segments(slot)
+
+    def _push_segments(self, slot: int) -> None:
+        seg = self.mc.segment_len
+        hist = self._hist[slot]
+        while len(hist) - self._pushed[slot] >= seg:
+            lo = int(self._pushed[slot])
+            self.bank.push(slot, np.asarray(hist[lo: lo + seg], np.int32))
+            self._pushed[slot] += seg
+
+    # ------------------------------------------------------------------
+    # triggers
+    # ------------------------------------------------------------------
+
+    def trigger_slots(self, logits, live_np: np.ndarray,
+                      lengths_np: np.ndarray, slots) -> List[int]:
+        """Slots whose dynamic-retrieval trigger fires on this step's
+        logits, after the deterministic host-side gates (enabled, cooldown,
+        retrieval budget, bank occupancy, not already in flight)."""
+        r = self.rcfg
+        if r.trigger == "flare":
+            fire = np.asarray(rag_m.flare_trigger(logits, tau=r.tau))
+        elif r.trigger == "dragin":
+            # attention-statistics proxy: log-context weight (deterministic,
+            # available without re-running attention)
+            ent_w = jnp.log1p(jnp.asarray(lengths_np, jnp.float32))
+            fire = np.asarray(rag_m.dragin_trigger(logits, ent_w, tau=r.tau))
+        else:
+            raise KeyError(f"unknown trigger {r.trigger!r}")
+        out = []
+        for i in np.flatnonzero(fire & live_np & self._enabled):
+            s = slots[i]
+            if s.done or self._waiting[i] or i in self._inflight:
+                continue
+            if self._n_ret[i] >= r.max_retrievals:
+                continue
+            if len(self._hist[i]) - self._last_len[i] < r.min_interval:
+                continue
+            if self.bank is not None and self.bank.counts[i] == 0:
+                continue
+            out.append(int(i))
+        return out
+
+    def splice_bound(self) -> int:
+        """Upper bound on spliced tokens per retrieval — page reservation
+        happens at the trigger step so the pool accounting is identical
+        under every scheduling mode."""
+        if self.service is not None:
+            return self.rcfg.k * self.service._tokens.shape[1]
+        return self.mc.retrieve_k
+
+    def note_suppressed(self, slot: int) -> None:
+        """Trigger fired but the pool/window cannot take the splice; charge
+        the cooldown so the slot does not re-fire every step."""
+        self.suppressed += 1
+        self._last_len[slot] = len(self._hist[slot])
+
+    # ------------------------------------------------------------------
+    # query launch / collection
+    # ------------------------------------------------------------------
+
+    def _query_window(self, slot: int) -> np.ndarray:
+        W = self.rcfg.query_window
+        h = self._hist[slot][-W:]
+        if len(h) < W:
+            h = [0] * (W - len(h)) + h
+        return np.asarray(h, np.int32)
+
+    def launch(self, slot: int) -> None:
+        """Dispatch the fired slot's query. ONE dataflow for every mode —
+        the slot pauses and its splice queues on the NEXT step regardless
+        (so co-resident services like the hetero lookahead see identical
+        host schedules); modes differ only in barriers: sync/inline block
+        here, overlap lets the retrieval device run under the next decode
+        step."""
+        toks = self._query_window(slot)
+        t0 = time.perf_counter()
+        if self.service is not None:
+            handle = self.service.query(toks[None] % self.service.vocab)
+        else:
+            handle = self.bank.query(slot, toks)
+        if self.mode != "overlap":
+            jax.block_until_ready(handle["ids"])
+        self._inflight[slot] = {"handle": handle, "age": 0, "t0": t0,
+                                "hist_len": len(self._hist[slot])}
+        self._waiting[slot] = True
+        self._n_ret[slot] += 1
+        self._last_len[slot] = len(self._hist[slot])
+
+    def tick(self) -> None:
+        for rec in self._inflight.values():
+            rec["age"] += 1
+
+    def collect_ready(self, min_age: int = 1) -> List:
+        """Consume finished queries: -> [(slot, tokens|None, embeds|None,
+        ids)]. Overlap collects with ``min_age>=1`` (the offload device had
+        a full decode step of concurrent wall time); sync/inline collect
+        immediately with ``min_age=0``."""
+        out = []
+        for slot in sorted(self._inflight):
+            rec = self._inflight[slot]
+            if rec["age"] < min_age:
+                continue
+            h = rec["handle"]
+            if self.service is not None:
+                ids, spans = self.service.collect(h, device=self.main_dev)
+                toks, embeds, ids = spans[0], None, ids[0]
+                if self.rcfg.validate:
+                    assert self.service.replay(h), \
+                        "overlapped rag query diverged from its replay"
+            else:
+                ids, embeds = self.bank.collect(h, device=self.main_dev)
+                toks = None
+                if self.rcfg.validate:
+                    assert self.bank.replay(h), \
+                        "overlapped mac query diverged from its replay"
+            del self._inflight[slot]
+            self._waiting[slot] = False
+            self.events.append({
+                "slot": slot, "ids": np.asarray(ids).tolist(),
+                "hist_len": rec["hist_len"],
+                "spliced": int(len(toks) if toks is not None
+                               else len(embeds)),
+                "latency_s": time.perf_counter() - rec["t0"],
+            })
+            out.append((slot, toks, embeds, ids))
+        return out
+
+    # ------------------------------------------------------------------
+
+    def waiting_mask(self) -> np.ndarray:
+        return self._waiting.copy()
+
+    def busy(self) -> bool:
+        return bool(self._inflight) or bool(self._waiting.any())
+
+    def report(self) -> Dict:
+        lat = [e["latency_s"] for e in self.events]
+        return {
+            "kind": self.rcfg.kind,
+            "mode": self.mode,
+            "trigger": self.rcfg.trigger,
+            "retrievals": len(self.events),
+            "suppressed": self.suppressed,
+            "spliced_tokens": int(sum(e["spliced"] for e in self.events)),
+            "trigger_to_splice_s": {
+                "mean": float(np.mean(lat)) if lat else 0.0,
+                "max": float(np.max(lat)) if lat else 0.0,
+            },
+            "transfer": self.ledger.as_dict(),
+            "devices": {"main": str(self.main_dev),
+                        "retrieval": str(self.off_dev
+                                         if self.mode != "inline"
+                                         else self.main_dev),
+                        "distinct": self.mode != "inline"
+                        and self.main_dev != self.off_dev},
+        }

@@ -1,0 +1,233 @@
+"""Offload-side retrieval implementations for the document-memory family.
+
+RAG and MaC declare ``OFFLOAD_STAGES = (prepare, relevancy, retrieve)`` just
+like the sparse-attention methods (paper Table 1 rows 4-6 and 8, Fig. 6b/c
+data placement), but their offload-resident state is not a KV-page summary:
+
+  rag : the corpus index — TF stats, document lengths, running document
+        frequencies / IDF, doc token payloads, optional doc embeddings —
+        capacity-padded so documents can be APPENDED incrementally with one
+        jitted update (no re-jit while the capacity holds);
+  mac : per-slot Titans/HMT memory banks — FIFO segment-summary embeddings
+        plus live counts.
+
+Both are expressed as ``hetero.select.OffloadSelect`` bundles so
+``make_offload_select`` covers every OFFLOAD_STAGES declarer. The callables
+keep the same roles (summary_init / reset / ingest / select) with
+family-specific signatures, documented per builder; the stateful device
+placement wrappers live in ``retrieval.service`` / ``retrieval.bank`` (the
+analogue of ``hetero.executor`` for the sparse-attention family).
+
+All functions are pure jnp so the services can jit them once and pin them
+to the retrieval device via committed inputs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.methods.mac import MacConfig, compute_relevancy, prepare_memory
+from repro.core.methods.rag import Corpus, idf_from_df
+from repro.kernels import ops
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+def _bm25_panel(s, terms):
+    """Gather the query's term panel from the store state: (tfq [B, C, T],
+    idf [B, T], dl/avgdl [B, C]) — the dynamic avgdl is folded into the
+    doc lengths so corpus growth never re-jits the scoring path."""
+    B, cap = terms.shape[0], s["doc_len"].shape[0]
+    tfq = jnp.moveaxis(jnp.take(s["tf"], terms, axis=1), 1,
+                       0).astype(jnp.float32)
+    idf = jnp.take(s["idf"], terms, axis=0)
+    dl = jnp.broadcast_to(s["doc_len"][None], (B, cap))
+    avgdl = jnp.sum(s["doc_len"]) / jnp.maximum(
+        s["n_docs"].astype(jnp.float32), 1.0)
+    return tfq, idf, dl / avgdl
+
+
+# ---------------------------------------------------------------------------
+# rag — corpus index with incremental ingest + fused BM25 selection
+# ---------------------------------------------------------------------------
+
+
+def _rag(corpus: Corpus, *, k: int, capacity: int = 0,
+         ingest_block: int = 64):
+    """RAG OffloadSelect. Signatures (B = queries, C = capacity):
+
+      summary_init()                      -> corpus state (capacity-padded)
+      reset(s, slot_ids)                  -> s (corpus is global; identity)
+      ingest(s, tf, dl, toks, emb, m)     -> s with ``m`` new docs appended
+                                             (fixed ingest_block row count;
+                                             rows >= m must be zero)
+      select(sp, s, terms [B, T])         -> (scores [B, k], doc_ids [B, k])
+
+    ``sp`` is unused (BM25 has no learned parameters) — kept for signature
+    parity with the sparse-attention bundles.
+    """
+    from repro.hetero.select import OffloadSelect
+
+    D0, Vr = corpus.tf.shape
+    C = max(capacity or _next_pow2(D0), _next_pow2(D0))
+    de = 0 if corpus.doc_embeds is None else corpus.doc_embeds.shape[1]
+    dmax = corpus.doc_tokens.shape[1]
+    mb = ingest_block
+
+    def summary_init():
+        pad = C - D0
+        df = (corpus.tf > 0).sum(axis=0).astype(jnp.int32)
+        s = {
+            "tf": jnp.pad(corpus.tf, ((0, pad), (0, 0))),
+            "doc_len": jnp.pad(corpus.doc_len.astype(jnp.float32), (0, pad)),
+            "doc_tokens": jnp.pad(corpus.doc_tokens, ((0, pad), (0, 0))),
+            "df": df,
+            "idf": idf_from_df(df, D0),
+            "n_docs": jnp.asarray(D0, jnp.int32),
+        }
+        if de:
+            s["doc_embeds"] = jnp.pad(corpus.doc_embeds, ((0, pad), (0, 0)))
+        return s
+
+    def reset(s, slot_ids):
+        return s
+
+    def ingest(s, tf_new, dl_new, toks_new, emb_new, m):
+        """Append up to ``ingest_block`` docs at the live watermark.
+        Masked scatter-ADD onto rows that are zero by the pad invariant
+        (add == set), with pad rows clipped to the last arena row where
+        they add zero — a final partial block near the capacity never
+        writes out of bounds, so the arena only grows when the LIVE docs
+        overflow it."""
+        start = s["n_docs"]
+        cap = s["doc_len"].shape[0]
+        live = (jnp.arange(mb) < m)
+        rows = jnp.clip(start + jnp.arange(mb), 0, cap - 1)
+        tf_new = tf_new * live[:, None]
+        out = dict(s)
+        out["tf"] = s["tf"].at[rows].add(tf_new)
+        out["doc_len"] = s["doc_len"].at[rows].add(dl_new * live)
+        out["doc_tokens"] = s["doc_tokens"].at[rows].add(
+            toks_new * live[:, None])
+        if de:
+            out["doc_embeds"] = s["doc_embeds"].at[rows].add(
+                emb_new * live[:, None])
+        out["df"] = s["df"] + (tf_new > 0).sum(axis=0).astype(jnp.int32)
+        out["n_docs"] = start + m
+        out["idf"] = idf_from_df(out["df"], out["n_docs"])
+        return out
+
+    def select(sp, s, terms):
+        # capacity read from the state shape: growing the arena re-traces
+        # for the new static shape, appending inside it never does
+        tfq, idf, dln = _bm25_panel(s, terms)
+        return ops.bm25_topk(tfq, dln, idf, k,
+                             block=min(4096, dln.shape[1]),
+                             avgdl=1.0, valid=s["n_docs"])
+
+    return OffloadSelect("rag", 1, k, C, summary_init, reset, ingest,
+                         None, select)
+
+
+def rag_hybrid_scores(s, terms, q_embed, alpha: float = 0.5):
+    """Two-stage first pass on the store state: live-masked z-scored
+    BM25 + dense-embedding hybrid (paper Table 1 row 5). -> [B, C]."""
+    from repro.kernels import ref as kref
+
+    C = s["tf"].shape[0]
+    tfq, idf, dln = _bm25_panel(s, terms)
+    lex = kref.bm25_scores(tfq, dln, idf, avgdl=1.0)
+    sem = q_embed @ s["doc_embeds"].T                           # [B, C]
+    live = (jnp.arange(C)[None] < s["n_docs"]).astype(jnp.float32)
+    n = jnp.maximum(live.sum(-1, keepdims=True), 1.0)
+
+    def z(x):
+        x = x * live
+        mu = x.sum(-1, keepdims=True) / n
+        var = (((x - mu) * live) ** 2).sum(-1, keepdims=True) / n
+        return (x - mu) / (jnp.sqrt(var) + 1e-6)
+
+    mix = alpha * z(lex) + (1 - alpha) * z(sem)
+    return jnp.where(live > 0, mix, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# mac — per-slot FIFO memory banks of segment-summary embeddings
+# ---------------------------------------------------------------------------
+
+
+def _mac(cfg: ArchConfig, mc: MacConfig, n_slots: int):
+    """MaC OffloadSelect. Signatures:
+
+      summary_init()                     -> {bank [n_slots, M, d], count}
+      reset(s, slot_ids)                 -> s with those banks cleared
+      ingest(s, sp, slot, seg_tokens)    -> s with the segment summary
+                                            FIFO-pushed into ``slot``'s bank
+      select(sp, s, q_tokens [W], slot)  -> (idx [r], embeds [r, d])
+
+    ``sp = {"embed": token embedding params, "mac": mac_init params}`` —
+    segment summaries and relevancy queries are computed from token
+    embeddings ON the retrieval device, so only token-id windows go down
+    and only [r, d] retrieved embeddings come back (paper Fig. 6c).
+    """
+    from repro.hetero.select import OffloadSelect
+
+    M, r, d = mc.memory_slots, mc.retrieve_k, cfg.d_model
+    assert mc.mode == "topk", "serving bank supports topk retrieval"
+
+    def summary_init():
+        return {"bank": jnp.zeros((n_slots, M, d), jnp.float32),
+                "count": jnp.zeros((n_slots,), jnp.int32)}
+
+    def reset(s, slot_ids):
+        return {"bank": s["bank"].at[slot_ids].set(0.0),
+                "count": s["count"].at[slot_ids].set(0)}
+
+    def ingest(s, sp, slot, seg_tokens):
+        emb = L.embed(sp["embed"], seg_tokens[None])       # [1, S, d]
+        memv = prepare_memory(sp["mac"], emb)[0]           # [d]
+        row = jnp.roll(s["bank"][slot], -1, axis=0).at[-1].set(memv)
+        return {"bank": s["bank"].at[slot].set(row),
+                "count": s["count"].at[slot].set(
+                    jnp.minimum(s["count"][slot] + 1, M))}
+
+    def select(sp, s, q_tokens, slot):
+        emb = L.embed(sp["embed"], q_tokens[None])          # [1, W, d]
+        scores = compute_relevancy(sp["mac"], emb,
+                                   s["bank"][slot][None])   # [1, M]
+        live = jnp.arange(M)[None] < s["count"][slot]
+        masked = jnp.where(live, scores, NEG_INF)
+        vals, idx = jax.lax.top_k(masked, r)
+        got = jnp.take_along_axis(s["bank"][slot][None],
+                                  idx[..., None], axis=1)   # [1, r, d]
+        idx = jnp.where(vals > NEG_INF / 2, idx, -1)
+        return idx[0].astype(jnp.int32), got[0]
+
+    return OffloadSelect("mac", mc.segment_len, r, M, summary_init, reset,
+                         ingest, None, select)
+
+
+# ---------------------------------------------------------------------------
+
+
+def make_retrieval_select(method: str, cfg: Optional[ArchConfig] = None, *,
+                          n_slots: int = 0, corpus: Optional[Corpus] = None,
+                          mac: Optional[MacConfig] = None, k: int = 4,
+                          capacity: int = 0, ingest_block: int = 64):
+    if method == "rag":
+        assert corpus is not None, "rag offload selection needs a corpus"
+        return _rag(corpus, k=k, capacity=capacity,
+                    ingest_block=ingest_block)
+    if method == "mac":
+        assert cfg is not None and mac is not None and n_slots > 0, \
+            "mac offload selection needs (cfg, mac config, n_slots)"
+        return _mac(cfg, mac, n_slots)
+    raise KeyError(f"method {method!r} has no retrieval-side selection")

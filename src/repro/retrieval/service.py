@@ -1,0 +1,162 @@
+"""RAG document-memory service — the serving-side retrieval engine.
+
+``RetrievalService`` hosts the corpus index (TF stats, IDF, doc lengths,
+embeddings, doc token payloads) as capacity-padded arrays COMMITTED to one
+JAX device — the offload device under ``mode=sync|overlap``, the main
+device inline — and answers term-id queries with the fused BM25 kernel
+*there*. Only ``[B, k]`` doc ids cross back (index-only exchange, PR-2
+style); the doc token spans the generator splices are assembled from the
+host-side token mirror and accounted separately as span traffic.
+
+Incremental ingest: documents are appended through one jitted
+``dynamic_update_slice`` per array at a fixed ``ingest_block`` row count, so
+growing the corpus never re-jits while the capacity holds; when it does not,
+the capacity doubles (amortized — the next select/ingest recompiles once for
+the new static shape).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.methods.rag import Corpus
+from repro.hetero.transfer import TransferLedger
+from repro.retrieval.select import make_retrieval_select, rag_hybrid_scores
+
+
+class RetrievalService:
+    def __init__(self, corpus: Corpus, *, k: int, device=None,
+                 capacity: int = 0, ingest_block: int = 64,
+                 ledger: Optional[TransferLedger] = None):
+        assert corpus.n_docs >= k, "corpus smaller than the retrieval k"
+        self.k = k
+        self.device = device or jax.devices()[0]
+        self.ingest_block = ingest_block
+        self.ledger = ledger or TransferLedger()
+        self.sel = make_retrieval_select("rag", corpus=corpus, k=k,
+                                         capacity=capacity,
+                                         ingest_block=ingest_block)
+        self.state = jax.device_put(self.sel.summary_init(), self.device)
+        self._select_jit = jax.jit(self.sel.select)
+        self._ingest_jit = jax.jit(self.sel.ingest)
+        self._hybrid_jit = jax.jit(rag_hybrid_scores,
+                                   static_argnames=("alpha",))
+        self.n_docs = corpus.n_docs
+        self.capacity = self.sel.n_pages
+        # host mirror of the token payloads for span assembly
+        dmax = corpus.doc_tokens.shape[1]
+        self._tokens = np.zeros((self.capacity, dmax), np.int32)
+        self._tokens[: self.n_docs] = np.asarray(corpus.doc_tokens)
+        self._tok_len = np.zeros((self.capacity,), np.int32)
+        self._tok_len[: self.n_docs] = np.asarray(corpus.doc_len, np.int32)
+        self.vocab = corpus.tf.shape[1]
+
+    # -- incremental ingest --------------------------------------------
+
+    # the doc-axis arrays of the store state (df/idf/n_docs are NOT padded
+    # on growth — df/idf run over the retrieval vocab, which can collide
+    # with the capacity by shape alone)
+    DOC_AXIS = ("tf", "doc_len", "doc_tokens", "doc_embeds")
+
+    def _grow(self, need: int) -> None:
+        """Double the arena (select/ingest read capacity from the state
+        shapes, so the next call re-traces once for the new static shape)."""
+        cap = self.capacity
+        new_cap = cap
+        while new_cap < need:
+            new_cap *= 2
+        pad = new_cap - cap
+        self.state = jax.device_put(
+            {k: (jnp.pad(v, ((0, pad),) + ((0, 0),) * (v.ndim - 1))
+                 if k in self.DOC_AXIS else v)
+             for k, v in self.state.items()}, self.device)
+        self._tokens = np.pad(self._tokens, ((0, pad), (0, 0)))
+        self._tok_len = np.pad(self._tok_len, (0, pad))
+        self.capacity = new_cap
+
+    def ingest(self, corpus: Corpus) -> None:
+        """Append ``corpus``'s documents to the store (incremental prepare
+        stage: df/idf refresh on device, token mirror on host)."""
+        tf = np.asarray(corpus.tf)
+        dl = np.asarray(corpus.doc_len, np.float32)
+        toks = np.asarray(corpus.doc_tokens)
+        emb = None if corpus.doc_embeds is None \
+            else np.asarray(corpus.doc_embeds)
+        assert tf.shape[1] == self.vocab, "retrieval vocab mismatch"
+        assert toks.shape[1] == self._tokens.shape[1], "doc_max mismatch"
+        de = self.state.get("doc_embeds")
+        if de is not None:
+            assert emb is not None and emb.shape[1] == de.shape[1], \
+                "store keeps doc embeddings: ingested corpus must carry " \
+                "matching-dimension doc_embeds"
+        mb = self.ingest_block
+        for lo in range(0, tf.shape[0], mb):
+            hi = min(lo + mb, tf.shape[0])
+            m = hi - lo
+            if self.n_docs + m > self.capacity:   # live docs overflow only
+                self._grow(self.n_docs + m)
+            pad = ((0, mb - m), (0, 0))
+            tf_b = jnp.asarray(np.pad(tf[lo:hi], pad))
+            dl_b = jnp.asarray(np.pad(dl[lo:hi], (0, mb - m)))
+            tk_b = jnp.asarray(np.pad(toks[lo:hi], pad))
+            de = self.state.get("doc_embeds")
+            eb_b = jnp.zeros((mb, 1), jnp.float32) if de is None else \
+                jnp.asarray(np.pad(emb[lo:hi], pad))
+            args = self.ledger.ship_down(
+                (tf_b, dl_b, tk_b, eb_b), self.device, bulk=True)
+            self.state = self._ingest_jit(self.state, *args,
+                                          jnp.asarray(m, jnp.int32))
+            self._tokens[self.n_docs: self.n_docs + m] = toks[lo:hi]
+            self._tok_len[self.n_docs: self.n_docs + m] = dl[lo:hi].astype(
+                np.int32)
+            self.n_docs += m
+
+    # -- queries --------------------------------------------------------
+
+    def query(self, terms: np.ndarray) -> Dict:
+        """Launch a BM25 top-k query for ``terms [B, T]`` on the hosting
+        device (async — collect with ``collect``). Returns a handle that
+        pins the state the selection was computed from (for validation)."""
+        t = self.ledger.ship_down(jnp.asarray(terms, jnp.int32), self.device)
+        state = self.state
+        scores, ids = self._select_jit(None, state, t)
+        return {"scores": scores, "ids": ids, "inputs": (state, t)}
+
+    def collect(self, handle: Dict, device=None
+                ) -> Tuple[np.ndarray, List[np.ndarray]]:
+        """Block on a query: -> (doc_ids [B, k], spans) where ``spans[b]``
+        is the concatenated token payload of row b's retrieved docs."""
+        ids_dev = self.ledger.ship_up(handle["ids"], device or self.device)
+        ids = np.asarray(ids_dev)
+        spans = []
+        for row in ids:
+            parts = [self._tokens[i, : self._tok_len[i]]
+                     for i in row if i >= 0]
+            span = np.concatenate(parts) if parts else \
+                np.zeros((0,), np.int32)
+            self.ledger.count_span(span.nbytes)
+            spans.append(span.astype(np.int32))
+        return ids, spans
+
+    def replay(self, handle: Dict) -> bool:
+        """Re-run the pinned selection synchronously; True iff the consumed
+        ids are bit-identical (validation mode)."""
+        state, t = handle["inputs"]
+        _, ref = jax.block_until_ready(self._select_jit(None, state, t))
+        return bool(np.array_equal(np.asarray(ref),
+                                   np.asarray(handle["ids"])))
+
+    def query_hybrid(self, terms: np.ndarray, q_embed: np.ndarray,
+                     n_first: int, alpha: float = 0.5):
+        """Two-stage first pass (BM25 + embedding hybrid) -> top-n_first
+        (scores, ids) device arrays on the hosting device."""
+        assert self.state.get("doc_embeds") is not None, \
+            "hybrid retrieval needs doc embeddings in the store"
+        t = self.ledger.ship_down(jnp.asarray(terms, jnp.int32), self.device)
+        qe = self.ledger.ship_down(jnp.asarray(q_embed, jnp.float32),
+                                   self.device)
+        mix = self._hybrid_jit(self.state, t, qe, alpha=alpha)
+        return jax.lax.top_k(mix, n_first)

@@ -69,6 +69,14 @@ class ServeConfig:
     # a sparse method (dsa | seer | lserve).
     offload: str = "off"
     offload_validate: bool = False  # replay each consumed selection + check
+    # --- retrieval subsystem (src/repro/retrieval) ---
+    # A repro.retrieval.RetrievalConfig enables the document-memory service:
+    # per-slot FLARE/DRAGIN triggers over the pooled decode logits, dynamic
+    # RAG doc splices / MaC memory-bank embedding splices through the
+    # chunked-extend path, inline or on the offload device (sync/overlap).
+    # Composes with ``offload`` — retrieval slots share the pool with
+    # sparse-attention slots. Requires paged=True.
+    retrieval: Optional[object] = None
 
 
 class Engine:
@@ -135,6 +143,15 @@ class Engine:
                 cfg, self.mem, self.sc, self.sparse_params,
                 mode=sc.offload, validate=sc.offload_validate)
 
+        self.retrieval = None
+        if sc.retrieval is not None:
+            assert sc.paged, "the retrieval subsystem serves the paged pool"
+            assert cfg.family in POOL_FAMILIES
+            from repro.retrieval import RetrievalExecutor
+            self.retrieval = RetrievalExecutor(
+                cfg, self.sc, sc.retrieval, params, key=key,
+                devices=self.hetero.devices if self.hetero else None)
+
         self._prefill = jax.jit(
             lambda p, toks: M.prefill(p, cfg, toks, max_len=sc.max_len,
                                       tp=sc.tp),
@@ -161,7 +178,7 @@ class Engine:
                 sparse_fn=self._sparse_fn, sparse_params=sp),
             donate_argnums=(2, 3))
         self._bucket_fns: Dict[Tuple[int, int], callable] = {}
-        self._extend_fns: Dict[int, callable] = {}
+        self._extend_fns: Dict[Tuple[int, bool], callable] = {}
         self._splice_fns: Dict[Tuple[int, int], callable] = {}
 
         self.slots = SlotManager(sc.n_slots, sc.max_len)
@@ -250,16 +267,18 @@ class Engine:
             self._splice_fns[key] = jax.jit(splice, donate_argnums=(0, 1))
         return self._splice_fns[key]
 
-    def admit_many(self, requests: List[Tuple[int, np.ndarray, int]]
-                   ) -> List[bool]:
+    def admit_many(self, requests: List[Tuple[int, np.ndarray, int]],
+                   retrieval: Optional[List] = None) -> List[bool]:
         """Admit a batch of (request_id, prompt, max_new): one bucketed
-        prefill per distinct bucket length instead of one per request."""
+        prefill per distinct bucket length instead of one per request.
+        ``retrieval[i]`` opts request i in/out of the retrieval service
+        (None = service default: on when configured)."""
         self._ensure_pool()
         if not self.sc.paged:
             return [self.admit(rid, p, mn) for rid, p, mn in requests]
         admitted: Dict[int, List] = {}   # bucket_len -> [(slot, prompt)]
         ok: List[bool] = []
-        for rid, prompt, max_new in requests:
+        for i, (rid, prompt, max_new) in enumerate(requests):
             prompt = np.asarray(prompt)
             total = len(prompt) + max_new
             if total > self.sc.max_len or not self.pool.can_alloc(total):
@@ -273,6 +292,10 @@ class Engine:
             admitted.setdefault(self._bucket_len(len(prompt)), []).append(
                 (slot, prompt))
             ok.append(True)
+            if self.retrieval is not None:
+                self.retrieval.on_admit(
+                    slot, prompt,
+                    retrieval[i] if retrieval is not None else None)
         ok.extend([False] * (len(requests) - len(ok)))
         t0 = time.perf_counter()
         for Sb, group in admitted.items():
@@ -309,11 +332,12 @@ class Engine:
         for i, (slot, _) in enumerate(group):
             self._pending[slot] = nxt[i]
 
-    def admit(self, request_id: int, prompt: np.ndarray, max_new: int) -> bool:
+    def admit(self, request_id: int, prompt: np.ndarray, max_new: int,
+              retrieval: Optional[bool] = None) -> bool:
         """Prefill one request into a free slot (insertion into the pool)."""
         if self.sc.paged:
             return self.admit_many([(request_id, np.asarray(prompt),
-                                     max_new)])[0]
+                                     max_new)], retrieval=[retrieval])[0]
         assert self.cfg.family in POOL_FAMILIES, \
             "continuous batching requires dense KV caches"
         self._ensure_pool()
@@ -333,7 +357,7 @@ class Engine:
     # -- chunked prefill (long prompts, interleaved with decode) --------
 
     def admit_chunked(self, request_id: int, prompt: np.ndarray,
-                      max_new: int) -> bool:
+                      max_new: int, retrieval: Optional[bool] = None) -> bool:
         """Allocate slot + pages now; the prompt itself is prefilled in
         ``prefill_chunk``-sized spans by ``prefill_step`` so long prompts
         don't stall the decode pool."""
@@ -348,30 +372,44 @@ class Engine:
             return False
         assert self.pool.alloc(slot, total)
         self.slots.slots[slot].length = 0      # grows as chunks land
-        self._chunks[slot] = [request_id, prompt, 0]
+        self._chunks[slot] = [request_id, prompt, 0, False]
         if self.hetero is not None:
             self.hetero.on_admit_slot(slot)
+        if self.retrieval is not None:
+            self.retrieval.on_admit(slot, prompt, retrieval)
         return True
 
     def has_prefill_work(self) -> bool:
         return bool(self._chunks)
 
-    def _get_extend_fn(self, C: int):
-        if C not in self._extend_fns:
+    def _get_extend_fn(self, C: int, embeds: bool = False):
+        key = (C, embeds)
+        if key not in self._extend_fns:
             cfg, sc = self.cfg, self.sc
             ckq = self.hetero is not None
-            self._extend_fns[C] = jax.jit(
-                lambda p, toks, kp, vp, table, lengths, nv: M.extend_paged(
-                    p, cfg, toks,
-                    {"k_pages": kp, "v_pages": vp, "page_table": table,
-                     "lengths": lengths},
-                    nv, tp=sc.tp, collect_kq=ckq),
-                donate_argnums=(2, 3))
-        return self._extend_fns[C]
+            if embeds:
+                fn = lambda p, toks, kp, vp, table, lengths, nv, xe, er: \
+                    M.extend_paged(
+                        p, cfg, toks,
+                        {"k_pages": kp, "v_pages": vp, "page_table": table,
+                         "lengths": lengths},
+                        nv, tp=sc.tp, collect_kq=ckq, x_embeds=xe,
+                        emb_rows=er)
+            else:
+                fn = lambda p, toks, kp, vp, table, lengths, nv: \
+                    M.extend_paged(
+                        p, cfg, toks,
+                        {"k_pages": kp, "v_pages": vp, "page_table": table,
+                         "lengths": lengths},
+                        nv, tp=sc.tp, collect_kq=ckq)
+            self._extend_fns[key] = jax.jit(fn, donate_argnums=(2, 3))
+        return self._extend_fns[key]
 
     def prefill_step(self) -> bool:
-        """Advance every mid-prefill slot by one chunk. Returns True if any
-        chunk work was done (call between decode steps to interleave)."""
+        """Advance every mid-prefill slot by one chunk — admission prompts
+        and retrieval splices alike (retrieved documents / MaC embeddings
+        ride the same chunked-extend machinery under the same budget).
+        Returns True if any chunk work was done."""
         if not self._chunks:
             return False
         self._ensure_pool()
@@ -379,18 +417,30 @@ class Engine:
         n = self.sc.n_slots
         toks = np.zeros((n, C), np.int32)
         n_valid = np.zeros((n,), np.int32)
-        for slot, (rid, prompt, pos) in self._chunks.items():
-            take = min(C, len(prompt) - pos)
-            toks[slot, :take] = prompt[pos: pos + take]
+        emb_rows = np.zeros((n,), bool)
+        x_embeds = None
+        for slot, (rid, payload, pos, is_emb) in self._chunks.items():
+            take = min(C, len(payload) - pos)
+            if is_emb:
+                if x_embeds is None:
+                    x_embeds = np.zeros((n, C, self.cfg.d_model), np.float32)
+                x_embeds[slot, :take] = payload[pos: pos + take]
+                emb_rows[slot] = True
+            else:
+                toks[slot, :take] = payload[pos: pos + take]
             n_valid[slot] = take
         lengths = np.asarray([s.length for s in self.slots.slots], np.int32)
         lengths = np.where(n_valid > 0, lengths, 0)
         t0 = time.perf_counter()
         table = self._table_view(lengths, extra=C)
-        out = self._get_extend_fn(C)(
-            self.params, jnp.asarray(toks), self.pool.device["k_pages"],
-            self.pool.device["v_pages"], table, jnp.asarray(lengths),
-            jnp.asarray(n_valid))
+        args = (self.params, jnp.asarray(toks), self.pool.device["k_pages"],
+                self.pool.device["v_pages"], table, jnp.asarray(lengths),
+                jnp.asarray(n_valid))
+        if x_embeds is not None:
+            out = self._get_extend_fn(C, embeds=True)(
+                *args, jnp.asarray(x_embeds), jnp.asarray(emb_rows))
+        else:
+            out = self._get_extend_fn(C)(*args)
         logits, pool = out[0], out[1]
         self.pool.device["k_pages"] = pool["k_pages"]
         self.pool.device["v_pages"] = pool["v_pages"]
@@ -398,10 +448,10 @@ class Engine:
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         finished = False
         for slot in list(self._chunks):
-            rid, prompt, pos = self._chunks[slot]
+            rid, payload, pos, is_emb = self._chunks[slot]
             take = int(n_valid[slot])
             self.slots.slots[slot].length += take
-            if pos + take >= len(prompt):
+            if pos + take >= len(payload):
                 self._pending[slot] = nxt[slot]
                 del self._chunks[slot]
                 finished = True
@@ -434,10 +484,13 @@ class Engine:
         return self.pool.device["page_table"][:, :npv]
 
     def _decode_live(self) -> np.ndarray:
-        """Slots that decode this step: live and not mid-prefill."""
+        """Slots that decode this step: live, not mid-prefill, and not
+        paused awaiting an overlapped retrieval result."""
         live = self.slots.live_mask()
         for slot in self._chunks:
             live[slot] = False
+        if self.retrieval is not None:
+            live &= ~self.retrieval.waiting_mask()
         return live
 
     def step_pool(self) -> List[Tuple[int, int, int]]:
@@ -450,6 +503,8 @@ class Engine:
             return self._step_pool_dense()
         live = self._decode_live()
         if not live.any():
+            if self.retrieval is not None:
+                self._retrieval_idle()
             return []
         lengths = np.where(live, self.slots.lengths(), 0).astype(np.int32)
         t0 = time.perf_counter()
@@ -471,13 +526,73 @@ class Engine:
         for i in np.flatnonzero(live):
             rid = self.slots.slots[i].request_id
             out.append((rid, int(i), int(self._pending[i])))
+            if self.retrieval is not None:
+                self.retrieval.note_token(int(i), int(self._pending[i]))
             self._pending[i] = nxt[i]
         self.stats["tokens"] += len(out)
         self.slots.step(live)
         for i in np.flatnonzero(live):
             if self.slots.slots[i].done:
                 self.pool.release(int(i))
+                if self.retrieval is not None:
+                    self.retrieval.on_release(int(i))
+        if self.retrieval is not None:
+            self._retrieval_step(logits, live, lengths)
         return out
+
+    # -- retrieval service hooks (src/repro/retrieval) ------------------
+
+    def has_retrieval_work(self) -> bool:
+        """True while a retrieval is in flight or a slot awaits its result
+        (the scheduler must keep stepping an otherwise-idle pool)."""
+        return self.retrieval is not None and self.retrieval.busy()
+
+    def _retrieval_idle(self) -> None:
+        """No decodable slot this step: still age + drain overlapped
+        queries so paused slots get their splice queued."""
+        rx = self.retrieval
+        rx.tick()
+        for job in rx.collect_ready(min_age=1):
+            self._queue_splice(*job)
+
+    def _retrieval_step(self, logits, live_np: np.ndarray,
+                        lengths_np: np.ndarray) -> None:
+        """Post-decode retrieval phase: consume queries launched on earlier
+        steps (the fired slot paused for exactly one step in EVERY mode —
+        one dataflow, barriers differ), then evaluate this step's triggers,
+        reserve pages, and launch."""
+        rx = self.retrieval
+        rx.tick()
+        for job in rx.collect_ready(min_age=1):
+            self._queue_splice(*job)
+        for slot in rx.trigger_slots(logits, live_np, lengths_np,
+                                     self.slots.slots):
+            if not self._reserve_splice(slot):
+                rx.note_suppressed(slot)
+                continue
+            rx.launch(slot)
+
+    def _reserve_splice(self, slot: int) -> bool:
+        """Grow the slot's page reservation for the retrieval upper bound
+        AT THE TRIGGER STEP, so pool accounting is schedule-independent."""
+        s = self.slots.slots[slot]
+        need = s.length + self.retrieval.splice_bound() + \
+            (s.max_new - s.generated)
+        if need > self.sc.max_len:
+            return False
+        return self.pool.grow(slot, need)
+
+    def _queue_splice(self, slot: int, tokens, embeds, ids) -> None:
+        """Push a retrieved payload into the chunked-extend queue; the slot
+        rejoins decode once the splice drains, its pending token REGENERATED
+        from the document-augmented context (FLARE semantics)."""
+        payload = tokens if tokens is not None else embeds
+        if payload is None or len(payload) == 0:
+            return
+        s = self.slots.slots[slot]
+        self._chunks[slot] = [s.request_id, payload, 0, embeds is not None]
+        self.retrieval.note_splice(
+            slot, tokens if tokens is not None else len(embeds))
 
     def _step_pool_dense(self) -> List[Tuple[int, int, int]]:
         """Legacy baseline: dense pool, shared length watermark (max over

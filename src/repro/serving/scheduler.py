@@ -32,6 +32,8 @@ class Request:
     submitted: float = dataclasses.field(default_factory=time.perf_counter)
     tokens: List[int] = dataclasses.field(default_factory=list)
     finished: Optional[float] = None
+    # retrieval-service opt-in/out (None = engine default when configured)
+    retrieval: Optional[bool] = None
 
 
 class Scheduler:
@@ -43,10 +45,12 @@ class Scheduler:
         self.done: Dict[int, Request] = {}
         self._next_id = 0
 
-    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+    def submit(self, prompt: np.ndarray, max_new: int,
+               retrieval: Optional[bool] = None) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append(Request(rid, np.asarray(prompt), max_new))
+        self.queue.append(Request(rid, np.asarray(prompt), max_new,
+                                  retrieval=retrieval))
         return rid
 
     def _admit(self):
@@ -60,7 +64,8 @@ class Scheduler:
             if chunked and plen > self.engine.sc.chunk_threshold:
                 # long prompt: reserve pages now, stream the prompt later
                 if not self.engine.admit_chunked(req.request_id, req.prompt,
-                                                 req.max_new):
+                                                 req.max_new,
+                                                 retrieval=req.retrieval):
                     break
                 self.queue.popleft()
                 self.inflight[req.request_id] = req
@@ -73,7 +78,8 @@ class Scheduler:
         if not batch:
             return
         oks = self.engine.admit_many(
-            [(r.request_id, r.prompt, r.max_new) for r in batch])
+            [(r.request_id, r.prompt, r.max_new) for r in batch],
+            retrieval=[r.retrieval for r in batch])
         # re-queue rejections at the FRONT, preserving FCFS order
         for r, ok in zip(reversed(batch), reversed(oks)):
             if ok:
@@ -100,9 +106,13 @@ class Scheduler:
                     self.done[rid] = req
                     del self.inflight[rid]
             if not emissions and not prefilled:
+                if self.engine.has_retrieval_work() or \
+                        self.engine.has_prefill_work():
+                    continue       # retrieval in flight, or a splice chunk
+                                   # was queued DURING this step's decode
                 if not self.queue:
                     break
-                if not self.inflight and not self.engine.has_prefill_work():
+                if not self.inflight:
                     break          # head request can never admit: stuck
 
         return self.done

@@ -98,6 +98,30 @@ def test_mac_segment_pipeline():
     assert int(bank["count"]) == mc.memory_slots
 
 
+def test_mac_build_pipeline_matches_segment_step():
+    """The 4-stage descriptor threads the relevancy scores into retrieve
+    (no recompute) and must produce exactly segment_step's context."""
+    cfg = get_arch("llama3.2-1b").smoke()
+    mc = mac.MacConfig(segment_len=16, memory_slots=8, retrieve_k=2)
+    mp = mac.mac_init(jax.random.PRNGKey(0), cfg)
+    bank = mac.bank_init(cfg, mc, batch=2)
+    seg = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    for _ in range(3):
+        bank = mac.push(bank, mac.prepare_memory(mp, seg))
+        seg = seg + 0.1
+    ref, _ = mac.segment_step(mp, bank, seg, mc)
+    pipe = mac.build_pipeline(mp, mc)
+    out = pipe.run((seg, bank), seg)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # stage contract: relevancy's scores are what retrieve consumes
+    I = pipe.prepare((seg, bank))
+    scores = pipe.relevancy(I, seg)
+    got = pipe.retrieve((seg, bank), scores)
+    np.testing.assert_array_equal(
+        np.asarray(got),
+        np.asarray(mac.retrieve(bank["bank"], scores, bank["count"], mc)))
+
+
 def test_ttt_reduces_reconstruction_loss():
     """The fast-weight update must reduce reconstruction loss within a
     sequence (that's the definition of test-time training)."""

@@ -1,0 +1,351 @@
+"""Serving-integrated retrieval subsystem (src/repro/retrieval).
+
+Load-bearing properties:
+
+  * the corpus store answers fused-BM25 queries identically to the inline
+    ``rag.bm25_retrieve`` path, and incremental ingest appends documents
+    without re-jitting the query/ingest functions (capacity permitting);
+  * FLARE/DRAGIN triggers firing MID-DECODE on pooled slots splice the
+    retrieved payload through the chunked-extend path, preserving the
+    paged pool's zero-page invariant;
+  * every scheduling mode — inline (the stop-retrieve-resume oracle),
+    sync (offload device, serialized), overlap (retrieval under decode) —
+    emits BIT-IDENTICAL token streams with identical retrieved doc ids /
+    embeddings, for dynamic RAG and for MaC memory banks, including mixed
+    pools where retrieval slots share the pool with sparse-attention
+    (hetero-offloaded) slots;
+  * the inline schedule itself matches a hand-rolled stop-retrieve-resume
+    oracle built from per-request ``generate`` over the doc-augmented
+    prompt.
+
+CI runs this file under ``XLA_FLAGS=--xla_force_host_platform_device_count=2``
+so sync/overlap place the corpus/banks on a REAL second device; with one
+device the service still runs (transfers degenerate to no-ops).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.core.methods import mac as mac_m
+from repro.core.methods import offload_stages, rag as rag_m
+from repro.data import build_corpus, sample_queries
+from repro.hetero.select import make_offload_select
+from repro.retrieval import RetrievalConfig, RetrievalService
+from repro.serving import Engine, ServeConfig, Scheduler
+
+MODES = ("inline", "sync", "overlap")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.models import init_params
+
+    cfg = get_arch("llama3.2-1b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
+    corpus = build_corpus(48, retrieval_vocab=128, doc_max=8,
+                          gen_vocab=cfg.vocab_size, embed_dim=16, seed=0)
+    return cfg, params, corpus
+
+
+def _free_pages_zero(pool) -> bool:
+    """Every page on the free list (and the reserved page 0) must be zero."""
+    idx = np.asarray([0] + pool.free, np.int32)
+    k = np.asarray(pool.device["k_pages"][:, idx], np.float32)
+    v = np.asarray(pool.device["v_pages"][:, idx], np.float32)
+    return not k.any() and not v.any()
+
+
+def _drain(eng, n_steps):
+    got = {}
+    for _ in range(n_steps):
+        if eng.has_prefill_work():
+            eng.prefill_step()
+        for rid, _slot, tok in eng.step_pool():
+            got.setdefault(rid, []).append(tok)
+    return got
+
+
+def _rcfg(corpus, mode, **kw):
+    base = dict(kind="rag", corpus=corpus, k=2, trigger="flare", tau=1.1,
+                min_interval=3, max_retrievals=1, query_window=6)
+    base.update(kw)
+    return RetrievalConfig(mode=mode, **base)
+
+
+# ---------------------------------------------------------------------------
+# corpus store / service
+# ---------------------------------------------------------------------------
+
+
+def test_store_matches_inline_bm25(setup):
+    """The device-resident store's fused query returns the same doc ids as
+    the inline per-request BM25 path."""
+    _, _, corpus = setup
+    svc = RetrievalService(corpus, k=4)
+    q = np.asarray(sample_queries(corpus, 3, 6, seed=1))
+    ids, spans = svc.collect(svc.query(q))
+    _, ref = rag_m.bm25_retrieve(corpus, jnp.asarray(q), k=4, fused=True)
+    np.testing.assert_array_equal(ids, np.asarray(ref))
+    # spans are the concatenated true-length token payloads of the docs
+    doc_toks = np.asarray(corpus.doc_tokens)
+    doc_len = np.asarray(corpus.doc_len, np.int32)
+    want = np.concatenate([doc_toks[i, : doc_len[i]] for i in ids[0]])
+    np.testing.assert_array_equal(spans[0], want)
+
+
+def test_incremental_ingest_appends_without_rejit(setup):
+    """New docs append through the fixed-block jitted path: no re-jit of
+    select/ingest while the capacity holds; queries see the new docs."""
+    _, _, corpus = setup
+    svc = RetrievalService(corpus, k=4, capacity=256)
+    q = np.asarray(sample_queries(corpus, 2, 6, seed=2))
+    svc.collect(svc.query(q))
+    sel_cache = svc._select_jit._cache_size()
+    extra = build_corpus(40, retrieval_vocab=128, doc_max=8,
+                         gen_vocab=512, embed_dim=16, seed=11)
+    svc.ingest(extra)
+    svc.ingest(rag_m.corpus_slice(extra, 0, 16))
+    assert svc.n_docs == corpus.n_docs + 56
+    ids, _ = svc.collect(svc.query(q))
+    assert svc._select_jit._cache_size() == sel_cache
+    assert svc._ingest_jit._cache_size() == 1
+    assert (ids < svc.n_docs).all() and (ids >= 0).all()
+    # a query biased at the ingested docs can retrieve them
+    q2 = np.asarray(sample_queries(extra, 2, 6, seed=3))
+    ids2, _ = svc.collect(svc.query(q2))
+    assert (ids2 >= corpus.n_docs).any()
+
+
+def test_ingest_grow_and_partial_block():
+    """Arena growth must pad only the doc-axis arrays (df/idf run over the
+    retrieval vocab, which can equal the capacity by shape), and a partial
+    final block at the capacity edge must append without growing."""
+    c = build_corpus(128, retrieval_vocab=128, doc_max=8, gen_vocab=512,
+                     seed=2)
+    svc = RetrievalService(c, k=4)          # capacity == vocab == 128
+    svc.ingest(rag_m.corpus_slice(c, 0, 40))
+    assert svc.capacity == 256 and svc.n_docs == 168
+    ids, _ = svc.collect(svc.query(
+        np.asarray(sample_queries(c, 2, 6, seed=4))))
+    assert (ids >= 0).all() and (ids < svc.n_docs).all()
+    c2 = build_corpus(120, retrieval_vocab=128, doc_max=8, gen_vocab=512,
+                      seed=3)
+    s2 = RetrievalService(c2, k=4, capacity=128, ingest_block=64)
+    s2.ingest(rag_m.corpus_slice(c2, 0, 8))  # 120 + 8 == capacity: no grow
+    assert s2.capacity == 128 and s2.n_docs == 128
+    np.testing.assert_array_equal(np.asarray(s2.state["tf"][120:]),
+                                  np.asarray(c2.tf[:8]))
+    np.testing.assert_array_equal(np.asarray(s2.state["tf"][:120]),
+                                  np.asarray(c2.tf))
+
+
+def test_make_offload_select_covers_all_declarers(setup):
+    """Every method that declares OFFLOAD_STAGES has an offload-side
+    implementation reachable through make_offload_select."""
+    cfg, _, corpus = setup
+    declarers = [m for m in ("dsa", "seer", "lserve", "rag", "mac",
+                             "memagent", "ttt", "none")
+                 if offload_stages(m)]
+    assert set(declarers) == {"dsa", "seer", "lserve", "rag", "mac"}
+    for m in declarers:
+        sel = make_offload_select(
+            m, cfg, cfg.memory, dsa_page=8, n_slots=2, max_len=64,
+            corpus=corpus, rag_k=3,
+            mac=mac_m.MacConfig(segment_len=16, memory_slots=4,
+                                retrieve_k=2))
+        assert sel.method == m and sel.n_sel >= 1
+
+
+# ---------------------------------------------------------------------------
+# dynamic-RAG triggers in the serving loop
+# ---------------------------------------------------------------------------
+
+
+def test_rag_trigger_modes_bitmatch(setup):
+    """FLARE firing mid-decode on pooled slots: doc splice through the
+    chunked-extend path; inline == sync == overlap token-for-token with the
+    same retrieved doc ids; pages come back clean."""
+    cfg, params, corpus = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (16, 9)]
+    streams, events = {}, {}
+    for mode in MODES:
+        sc = ServeConfig(max_len=128, n_slots=2, method="none", tp=4,
+                         kv_page_size=16,
+                         retrieval=_rcfg(corpus, mode, validate=True))
+        eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+        assert all(eng.admit_many([(i, p, 8) for i, p in
+                                   enumerate(prompts)]))
+        streams[mode] = _drain(eng, 26)
+        events[mode] = [(e["slot"], tuple(e["ids"]), e["spliced"])
+                        for e in eng.retrieval.events]
+        assert len(events[mode]) == 2          # one retrieval per slot
+        assert eng.pool.pages_in_use() == 0
+        assert _free_pages_zero(eng.pool)      # zero-page invariant
+    assert streams["inline"] == streams["sync"] == streams["overlap"]
+    assert events["inline"] == events["sync"] == events["overlap"]
+
+
+def test_inline_matches_stop_retrieve_resume_oracle(setup):
+    """The pooled inline schedule == a hand-rolled oracle: stop at the
+    trigger, retrieve with the standalone BM25 path, append the docs to the
+    context, regenerate the pending token, resume per-request decode."""
+    cfg, params, corpus = setup
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
+    max_new = 10
+    sc = ServeConfig(max_len=128, n_slots=1, method="none", tp=4,
+                     kv_page_size=16,
+                     retrieval=_rcfg(corpus, "inline", min_interval=4))
+    eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+    assert eng.admit(0, prompt, max_new)
+    stream = _drain(eng, 30)[0]
+    assert len(stream) == max_new
+    [event] = eng.retrieval.events
+    n_before = event["hist_len"] - len(prompt)   # tokens fed pre-trigger
+    # oracle: per-slot window query -> standalone retrieval -> doc append
+    ctx = np.concatenate([prompt, np.asarray(stream[:n_before], np.int32)])
+    q = (ctx[-6:] % corpus.tf.shape[1]).astype(np.int32)
+    _, ids = rag_m.bm25_retrieve(corpus, jnp.asarray(q)[None], k=2,
+                                 fused=True)
+    np.testing.assert_array_equal(np.asarray(ids[0]), event["ids"])
+    doc_toks = np.asarray(corpus.doc_tokens)
+    doc_len = np.asarray(corpus.doc_len, np.int32)
+    span = np.concatenate([doc_toks[i, : doc_len[i]]
+                           for i in np.asarray(ids[0])])
+    prompt2 = np.concatenate([ctx, span]).astype(np.int32)
+    # resume: per-request generate over the doc-augmented context
+    eng2 = Engine(cfg, params, ServeConfig(max_len=128, n_slots=1,
+                                           method="none", tp=4),
+                  key=jax.random.PRNGKey(0))
+    cont = eng2.generate(jnp.asarray(prompt2)[None],
+                         max_new - n_before)[0]
+    np.testing.assert_array_equal(np.asarray(stream[n_before:]), cont)
+
+
+def test_trigger_gating(setup):
+    """tau below any confidence never fires; the per-request retrieval
+    budget and the per-request opt-out are honored."""
+    cfg, params, corpus = setup
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+               for _ in range(2)]
+    sc = ServeConfig(max_len=128, n_slots=2, method="none", tp=4,
+                     kv_page_size=16,
+                     retrieval=_rcfg(corpus, "inline", tau=0.0))
+    eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+    assert all(eng.admit_many([(i, p, 6) for i, p in enumerate(prompts)]))
+    _drain(eng, 10)
+    assert eng.retrieval.events == []          # never fires at tau=0
+    sc2 = ServeConfig(max_len=128, n_slots=2, method="none", tp=4,
+                      kv_page_size=16,
+                      retrieval=_rcfg(corpus, "inline", tau=1.1,
+                                      min_interval=2, max_retrievals=2))
+    eng2 = Engine(cfg, params, sc2, key=jax.random.PRNGKey(0))
+    assert all(eng2.admit_many([(i, p, 10) for i, p in enumerate(prompts)],
+                               retrieval=[True, False]))
+    _drain(eng2, 40)
+    per_slot = {}
+    for e in eng2.retrieval.events:
+        per_slot[e["slot"]] = per_slot.get(e["slot"], 0) + 1
+    assert per_slot.get(0, 0) == 2             # budget reached
+    assert 1 not in per_slot                   # opted out
+
+
+# ---------------------------------------------------------------------------
+# MaC memory-bank service
+# ---------------------------------------------------------------------------
+
+
+def test_mac_bank_modes_bitmatch(setup):
+    """Segment summaries pushed at page boundaries, retrieved embeddings
+    spliced through the same chunked path: all three modes bit-match and
+    report the same retrieved bank indices."""
+    cfg, params, _ = setup
+    mc = mac_m.MacConfig(segment_len=16, memory_slots=4, retrieve_k=2)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (40, 22)]
+    streams, events = {}, {}
+    for mode in MODES:
+        rcfg = RetrievalConfig(kind="mac", mode=mode, mac=mc,
+                               trigger="flare", tau=1.1, min_interval=2,
+                               max_retrievals=2, query_window=8,
+                               validate=True)
+        sc = ServeConfig(max_len=128, n_slots=2, method="none", tp=4,
+                         kv_page_size=16, retrieval=rcfg)
+        eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+        assert all(eng.admit_many([(i, p, 8) for i, p in
+                                   enumerate(prompts)]))
+        streams[mode] = _drain(eng, 34)
+        events[mode] = [(e["slot"], tuple(e["ids"])) for e in
+                        eng.retrieval.events]
+        assert events[mode], "no MaC retrieval fired"
+        # prompt segments were summarized at admission (40 tokens -> 2)
+        assert eng.pool.pages_in_use() == 0
+        assert _free_pages_zero(eng.pool)
+    assert streams["inline"] == streams["sync"] == streams["overlap"]
+    assert events["inline"] == events["sync"] == events["overlap"]
+
+
+# ---------------------------------------------------------------------------
+# mixed pool: retrieval slots + hetero-offloaded sparse-attention slots
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["dsa", "lserve"])
+def test_mixed_pool_with_hetero_offload(setup, method):
+    """A retrieval-enabled slot and a sparse-attention slot share the paged
+    pool while the hetero executor offloads selection: the fully overlapped
+    configuration bit-matches the fully synchronous one."""
+    cfg, params, corpus = setup
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (16, 24)]
+    streams = {}
+    for off, rmode in (("sync", "inline"), ("overlap", "overlap")):
+        sc = ServeConfig(max_len=128, n_slots=2, method=method, tp=4,
+                         page=8, kv_page_size=16, offload=off,
+                         retrieval=_rcfg(corpus, rmode))
+        eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+        assert all(eng.admit_many([(i, p, 6) for i, p in
+                                   enumerate(prompts)],
+                                  retrieval=[True, False]))
+        streams[(off, rmode)] = _drain(eng, 24)
+        assert eng.retrieval.events and \
+            eng.retrieval.events[0]["slot"] == 0
+        assert eng.hetero.profiler.offload_steps > 0
+        assert eng.pool.pages_in_use() == 0
+        assert _free_pages_zero(eng.pool)
+    assert streams[("sync", "inline")] == streams[("overlap", "overlap")]
+
+
+# ---------------------------------------------------------------------------
+# scheduler end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_serves_retrieval_requests(setup):
+    """Overlapped retrieval under the scheduler: paused slots don't trip the
+    starvation brake, all requests finish, DRAGIN triggers fire."""
+    cfg, params, corpus = setup
+    rng = np.random.default_rng(9)
+    rcfg = _rcfg(corpus, "overlap", trigger="dragin", tau=0.0,
+                 min_interval=4)
+    sc = ServeConfig(max_len=128, n_slots=2, method="none", tp=4,
+                     kv_page_size=16, prefill_chunk=16, chunk_threshold=32,
+                     retrieval=rcfg)
+    eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+    sch = Scheduler(eng, prefill_token_budget=32)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (10, 40, 16)]
+    rids = [sch.submit(p, max_new=6) for p in prompts]
+    done = sch.run()
+    assert sorted(done) == sorted(rids)
+    assert all(len(done[r].tokens) == 6 for r in rids)
+    assert eng.retrieval.events
+    assert eng.pool.pages_in_use() == 0
+    assert _free_pages_zero(eng.pool)
