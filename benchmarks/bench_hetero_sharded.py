@@ -1,0 +1,117 @@
+"""Sharded hetero offload: per-shard offload devices + index-only merge
+(paper §5.2 / Fig. 6a at scale).
+
+Serves the same pooled-decode workload through the hetero executor with a
+growing number of KV-sequence shards on the offload side (1 = the PR-2
+single-device executor, 2/4 = ``ShardedHeteroExecutor`` with one summary
+shard per device) and reports:
+
+  * per-step decode wall time per topology (sharding must not change
+    tokens — bit-exactness is pinned by tests/test_hetero_sharded.py —
+    so any delta is pure scheduling/transfer cost or win);
+  * the INDEX-ONLY INVARIANT, machine-readably: every shard's up link
+    moves k (val, idx) candidate pairs per step — 8 bytes per candidate —
+    which must stay below the bytes of ONE KV page (what a page-shipping
+    design would move per selected page, per layer);
+  * per-shard down/up traffic from the per-shard TransferLedgers.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (CI's
+bench-smoke does) to give shards real devices: main + one per shard at
+shards=2, round-robin above that.
+
+Direct invocation: ``python benchmarks/bench_hetero_sharded.py --smoke``.
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_cfg, pick, record_result, row
+from repro.models import init_params
+from repro.serving import Engine, ServeConfig
+
+REPEATS = 3
+
+
+def _serve_steps(cfg, params, shards, *, prompt_len, steps, n_slots, page):
+    total = 2 + REPEATS * steps + 4
+    sc = ServeConfig(max_len=prompt_len + total + 2 * page, n_slots=n_slots,
+                     method="dsa", tp=4, page=page, kv_page_size=16,
+                     offload="overlap", offload_shards=shards)
+    eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    reqs = [(i, rng.integers(0, cfg.vocab_size, size=prompt_len)
+             .astype(np.int32), total) for i in range(n_slots)]
+    assert all(eng.admit_many(reqs))
+    for _ in range(2):                      # compile + pipeline warm-up
+        eng.step_pool()
+    reps = []
+    for _ in range(pick(REPEATS, 1)):
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            eng.step_pool()
+        reps.append((time.perf_counter() - t0) / steps)
+    return eng, float(np.min(reps))
+
+
+def run():
+    cfg = bench_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
+    prompt_len = pick(192, 32)
+    steps = pick(24, 3)
+    n_slots = pick(4, 2)
+    # one KV page on the interconnect: page_size tokens * KV heads * head
+    # dim * bf16 * (K and V) — the unit the index-only exchange must beat
+    kv_page_bytes = 16 * cfg.n_kv_heads * cfg.hd * 2 * 2
+    per_step = {}
+    for shards in (1, 2, 4):
+        eng, s = _serve_steps(cfg, params, shards, prompt_len=prompt_len,
+                              steps=steps, n_slots=n_slots, page=16)
+        per_step[shards] = s
+        hx = eng.hetero
+        rep = hx.report()
+        if shards == 1:
+            ledgers = [hx.ledger]
+            n_part = hx.sel.n_sel
+        else:
+            ledgers = hx.ledgers
+            n_part = rep["shards"]["candidates_per_shard"]
+        up_per_step = [led.up_bytes / max(led.steps, 1) for led in ledgers]
+        index_only_ok = all(u < kv_page_bytes for u in up_per_step)
+        yield row(f"hetero_sharded_decode_shards{shards}", s,
+                  f"{n_slots}x{prompt_len}+{steps},"
+                  f"up_B/step/shard={max(up_per_step):.0f}")
+        record_result("hetero_sharded", f"dsa_shards{shards}", {
+            "us_per_step": 1e6 * s,
+            "tokens_per_s": n_slots / s,
+            "shards": shards,
+            "devices": jax.device_count(),
+            "distinct_offload_devices":
+                rep["shards"]["distinct_offload_devices"]
+                if shards > 1 else int(rep["devices"]["distinct"]),
+            "candidates_per_shard": n_part,
+            "per_shard_up_bytes_per_step": up_per_step,
+            "kv_page_bytes": kv_page_bytes,
+            "index_only_ok": index_only_ok,
+            "vs_shards1_speedup": per_step[1] / s,
+            "transfer": rep["transfer"],
+        })
+    yield row("hetero_sharded_scaling", per_step[max(per_step)],
+              f"shards1={1e6 * per_step[1]:.0f}us,"
+              f"shards4={1e6 * per_step[4]:.0f}us")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks import common
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    common.set_smoke(ap.parse_args().smoke)
+    for r in run():
+        print(r, flush=True)

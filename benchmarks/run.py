@@ -1,7 +1,7 @@
 """Benchmark orchestrator — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes the
 structured payloads modules deposit via ``common.record_result`` to
-``BENCH_PR3.json`` at the repo root (method, tokens/s, per-stage
+``BENCH_PR4.json`` at the repo root (method, tokens/s, per-stage
 fractions, ...) so the perf trajectory is diffable across PRs.
 
 ``--smoke``: tiny configs and single iterations (run in CI so benchmark code
@@ -22,7 +22,7 @@ from benchmarks import common
 from benchmarks import (bench_memory_fraction, bench_kernel_speedup,
                         bench_e2e, bench_energy, bench_batch_scaling,
                         bench_comm_bytes, bench_hetero_overlap,
-                        bench_retrieval)
+                        bench_hetero_sharded, bench_retrieval)
 
 BENCHES = [
     ("memory_fraction (Fig 3/4/5)", bench_memory_fraction),
@@ -32,11 +32,12 @@ BENCHES = [
     ("batch_scaling (Table 4)", bench_batch_scaling),
     ("comm_bytes (App C.1/Fig 16)", bench_comm_bytes),
     ("hetero_overlap (§5.3 offload)", bench_hetero_overlap),
+    ("hetero_sharded (Fig 6a per-shard offload)", bench_hetero_sharded),
     ("retrieval (dynamic RAG/MaC service)", bench_retrieval),
 ]
 
 JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_PR3.json")
+    os.path.abspath(__file__))), "BENCH_PR4.json")
 
 
 def main() -> None:

@@ -170,3 +170,67 @@ def distributed_sparse_decode(
         check_rep=False,
     )
     return fn(q, k_cache, v_cache, page_ids, length)
+
+
+def distributed_paged_sparse_decode(
+    q: jnp.ndarray,         # [B, Hq, dh]
+    k_cache: jnp.ndarray,   # [B, S, KV, dh] paged-pool VIEW, sharded on S
+    v_cache: jnp.ndarray,
+    page_ids: jnp.ndarray,  # [B, P] GLOBAL logical page ids, -1 invalid
+    lengths: jnp.ndarray,   # [B] per-slot live lengths
+    mesh: Mesh,
+    axis="model",
+    *,
+    page_size: int = 64,
+    batch_axis=None,
+):
+    """``distributed_sparse_decode`` extended to the SERVING pool contract
+    (paper Fig. 6a applied to the engine's paged KV pool):
+
+      * ``k_cache``/``v_cache`` are the gathered paged-pool view
+        (``kernels.page_pool.pool_gather`` over the slot's page table) —
+        positions outside a slot's live region are exact zeros by the
+        pool's zero-page invariant, so cutting the view into sequence
+        shards never exposes stale data;
+      * ``lengths`` is PER SLOT (continuous batching: every slot attends
+        at its own offset); each shard clips it to its window;
+      * ``page_ids`` may carry ``-1`` holes anywhere (merged sharded
+        selections, threshold selection) — holes are masked locally.
+
+    Each shard attends to ITS selected pages only; the mesh exchanges
+    (out, lse) pairs — O(B * Hq * dh * n_shards) bytes, independent of S
+    and k — and FlashDecoding-merges them. Returns (out [B, Hq, dh],
+    lse [B, Hq]), the same contract as ``ops.paged_decode_attention`` so it
+    drops into ``models.decode_step_paged_presel``'s ``page_attn`` seam.
+    """
+    axes = _axes_tuple(axis)
+    n_shards = _n_shards(mesh, axes)
+    S = k_cache.shape[1]
+    assert S % (n_shards * page_size) == 0, (S, n_shards, page_size)
+    local_S = S // n_shards
+    local_pages = local_S // page_size
+    ba = batch_axis
+
+    def local_fn(q_l, kc_l, vc_l, pids, len_g):
+        shard = _shard_index(mesh, axes)
+        local = pids - shard * local_pages
+        mine = (pids >= 0) & (local >= 0) & (local < local_pages)
+        local = jnp.where(mine, local, -1)
+        len_l = jnp.clip(len_g - shard * local_S, 0, local_S)
+        out, lse = ops.paged_decode_attention(
+            q_l, kc_l, vc_l, local.astype(jnp.int32), len_l,
+            page_size=page_size)
+        outs = jax.lax.all_gather(out, axes)   # [n_shards, B, Hq, dh]
+        lses = jax.lax.all_gather(lse, axes)
+        return ops.lse_merge(outs, lses)
+
+    seq_spec = axes if len(axes) > 1 else axes[0]
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(ba), P(ba, seq_spec, None, None),
+                  P(ba, seq_spec, None, None), P(ba), P(ba)),
+        out_specs=(P(ba), P(ba)),
+        check_rep=False,
+    )
+    return fn(q, k_cache, v_cache, page_ids, lengths)

@@ -29,6 +29,21 @@ Because the dataflow is identical, the two modes are bit-identical
 re-executes every consumed selection synchronously from the pinned inputs
 and asserts bitwise equality + stale-index validity, turning any buffer
 misuse in the async schedule into an immediate failure.
+
+INVALIDATION IS PER SLOT: pool-membership events (a finished admission, a
+drained retrieval splice) mark only the affected slots dirty instead of
+discarding the whole pending lookahead. The next decode step still consumes
+the overlapped buffer — clean slots keep their lookahead selection, dirty
+rows are patched from a fresh selection launched at consumption time. Both
+scheduling modes patch at the same host events, so determinism holds, and
+retrieval-heavy pools stop paying a cold-start for every splice that lands
+(``profiler.lookahead_hits`` vs ``lookahead_cold`` makes the reuse rate
+observable; tests/test_hetero_sharded.py pins it).
+
+The selection-state methods (`_launch_select` / `_to_apply` / `_ingest_step`
+/ `_patch` / pinned-input plumbing) are the override surface of
+``hetero.sharded.ShardedHeteroExecutor``, which runs one summary shard per
+offload device and merges per-shard top-k candidates on the main device.
 """
 from __future__ import annotations
 
@@ -45,6 +60,8 @@ from repro.hetero.profiler import HeteroProfiler
 from repro.hetero.select import make_offload_select
 from repro.hetero.transfer import TransferLedger
 from repro.models import model as M
+
+PATCHED = "patched"   # tag of composite pinned-input records
 
 
 class HeteroExecutor:
@@ -63,7 +80,21 @@ class HeteroExecutor:
         self.ledger = TransferLedger()
         self.profiler = HeteroProfiler(cfg, mem, mode)
 
-        # offload-resident state: method params, index summary, stale query
+        self.sel_buf = None            # selection for the NEXT decode step
+        self._sel_inputs = None        # pinned inputs of it (validation)
+        self._dirty = np.zeros((sc.n_slots,), bool)  # rows needing a patch
+        self._neg_sel = jax.device_put(
+            jnp.full((cfg.n_layers, sc.n_slots, self.sel.n_sel), -1,
+                     jnp.int32), self.main_dev)
+        self._init_offload_state(sparse_params)
+
+        self._span_jits: Dict[Tuple, callable] = {}
+        self._apply_jits: Dict[int, callable] = {}
+
+    def _init_offload_state(self, sparse_params) -> None:
+        """Offload-resident state: method params, index summary, stale
+        query buffer — one copy on the single offload device."""
+        cfg, sc = self.cfg, self.sc
         self.sp_off = jax.device_put(sparse_params, self.off_dev)
         self.summary = jax.device_put(self.sel.summary_init(), self.off_dev)
         from repro.models import layers as L
@@ -71,16 +102,8 @@ class HeteroExecutor:
         self.q_buf = jax.device_put(
             jnp.zeros((cfg.n_layers, sc.n_slots, hp, cfg.hd),
                       L.dtype_of(cfg)), self.off_dev)
-        self.sel_buf = None            # selection for the NEXT decode step
-        self._sel_inputs = None        # pinned (summary, q, lengths) of it
-        self._neg_sel = jax.device_put(
-            jnp.full((cfg.n_layers, sc.n_slots, self.sel.n_sel), -1,
-                     jnp.int32), self.main_dev)
-
         self._select_jit = jax.jit(self.sel.select)
         self._ingest_jit = jax.jit(self.sel.ingest)
-        self._span_jits: Dict[Tuple[int, int], callable] = {}
-        self._apply_jits: Dict[int, callable] = {}
 
     @property
     def devices(self) -> Tuple:
@@ -112,68 +135,162 @@ class HeteroExecutor:
             self._span_jits[key] = jax.jit(self.sel.ingest_span)
         return self._span_jits[key]
 
+    # ------------------------------------------------------------------
+    # selection-state primitives (overridden by ShardedHeteroExecutor)
+    # ------------------------------------------------------------------
+
     def _launch_select(self, lengths_np: np.ndarray):
         """Queue a selection on the offload device from the CURRENT summary
-        and stale-query buffers; pins the inputs for validation."""
+        and stale-query buffers -> (handle, pinned inputs)."""
         lengths = jnp.asarray(lengths_np, jnp.int32)
         inputs = (self.summary, self.q_buf, lengths)
-        self._sel_inputs = inputs
-        return self._select_jit(self.sp_off, *inputs)
+        return self._select_jit(self.sp_off, *inputs), inputs
+
+    def _to_apply(self, handle):
+        """Ship the consumable selection to the main device as pidx
+        [L, B, n_sel] (the index-only up exchange)."""
+        return self.ledger.ship_up(handle, self.main_dev)
+
+    def _patch(self, old, fresh, dirty_np: np.ndarray):
+        """Row-patch a pending selection handle: dirty slots take the fresh
+        selection, clean slots keep their overlapped lookahead."""
+        d = jnp.asarray(dirty_np)[None, :, None]
+        return jax.tree_util.tree_map(lambda a, b: jnp.where(d, b, a),
+                                      old, fresh)
+
+    def _pin_state(self):
+        """Pre-step offload state refs for the overlapped lookahead (the
+        concurrent select must not see this step's keys/queries)."""
+        return self.summary, self.q_buf
+
+    def _ingest_step(self, pinned, q_t, k_t, lengths, live):
+        """Ship this step's queries/keys down; fold them into the index
+        summary and the stale-query buffer."""
+        summary_prev, q_prev = pinned
+        q_off = self.ledger.ship_down(q_t, self.off_dev)
+        k_off = self.ledger.ship_down(k_t, self.off_dev)
+        self.summary = self._ingest_jit(summary_prev, self.sp_off, k_off,
+                                        lengths, live)
+        self.q_buf = self._blend_q(q_prev, q_off, None, live)
+        return self.summary
+
+    def _tick(self) -> None:
+        self.ledger.tick()
+
+    # -- pinned-input plumbing (shared with the sharded subclass) -------
+
+    def _raw_lengths(self, inputs):
+        return inputs[2]
+
+    def _replay_handle(self, inputs):
+        """Synchronously recompute the selection handle a consumed buffer
+        was produced from (recursing through row patches)."""
+        if isinstance(inputs, tuple) and inputs and inputs[0] == PATCHED:
+            _, old, fresh, dirty = inputs
+            return self._patch(self._replay_handle(old),
+                               self._replay_handle(fresh), dirty)
+        return self._select_from_pinned(inputs)
+
+    def _select_from_pinned(self, inputs):
+        summary, q, lengths = inputs
+        return self._select_jit(self.sp_off, summary, q, lengths)
+
+    def _pinned_lengths(self, inputs):
+        if isinstance(inputs, tuple) and inputs and inputs[0] == PATCHED:
+            _, old, fresh, dirty = inputs
+            return jnp.where(jnp.asarray(dirty),
+                             self._pinned_lengths(fresh),
+                             self._pinned_lengths(old))
+        return self._raw_lengths(inputs)
+
+    def _handle_to_pidx(self, handle, inputs):
+        """Final selection from a (replayed) handle — identity here, the
+        candidate merge for the sharded subclass."""
+        return handle
 
     # ------------------------------------------------------------------
     # admission / prefill hooks (keep the offload index coherent)
     # ------------------------------------------------------------------
+
+    @staticmethod
+    def _blend_q(q_buf, q_off, sid, keep_q):
+        """Stale-query refresh rule, shared with the sharded subclass:
+        ``keep_q=None`` overwrites the seeded slots' rows (admission),
+        otherwise only rows whose slot advanced this chunk (``keep_q``
+        mask) take the new query."""
+        if keep_q is None:
+            return q_buf.at[:, sid].set(q_off.astype(q_buf.dtype))
+        adv = jnp.asarray(keep_q)
+        return jnp.where(adv[None, :, None, None],
+                         q_off.astype(q_buf.dtype), q_buf)
+
+    def _reset_slots(self, slot_ids: List[int]) -> None:
+        sid = jax.device_put(jnp.asarray(slot_ids, jnp.int32), self.off_dev)
+        self.summary = self.sel.reset(self.summary, sid)
+
+    def _seed_span(self, slot_ids, k_masked, start_np, n_valid_np, q_last,
+                   *, keep_q: np.ndarray = None) -> None:
+        """Ship a prompt/chunk key span down (bulk prefill traffic) and fold
+        it into the summary; refresh the stale-query buffer (all rows, or
+        only ``keep_q`` rows for chunked spans where some slots idled)."""
+        sid = jnp.asarray(slot_ids, jnp.int32)
+        k_off = self.ledger.ship_down(k_masked, self.off_dev, bulk=True)
+        q_off = self.ledger.ship_down(q_last, self.off_dev, bulk=True)
+        Bg, S = k_off.shape[1], k_off.shape[2]
+        self.summary = self._span_fn(Bg, S)(
+            self.summary, self.sp_off, k_off, sid,
+            jnp.asarray(start_np, jnp.int32),
+            jnp.asarray(n_valid_np, jnp.int32))
+        self.q_buf = self._blend_q(self.q_buf, q_off, sid, keep_q)
 
     def on_admit(self, slot_ids: List[int], k_masked, true_lens: np.ndarray,
                  q_last) -> None:
         """Bucketed admission: reset the slots' summary rows, bulk-ship the
         prompt keys (the memory moves to the accelerator at prefill, §5.1),
         seed the stale-query buffer with the last-prompt-token queries."""
-        sid = jax.device_put(jnp.asarray(slot_ids, jnp.int32), self.off_dev)
-        self.summary = self.sel.reset(self.summary, sid)
-        k_off = self.ledger.ship_down(k_masked, self.off_dev, bulk=True)
-        q_off = self.ledger.ship_down(q_last, self.off_dev, bulk=True)
-        Bg, S = k_off.shape[1], k_off.shape[2]
-        self.summary = self._span_fn(Bg, S)(
-            self.summary, self.sp_off, k_off, sid,
-            jnp.zeros((Bg,), jnp.int32), jnp.asarray(true_lens, jnp.int32))
-        self.q_buf = self.q_buf.at[:, sid].set(
-            q_off.astype(self.q_buf.dtype))
-        self.invalidate()
+        self._reset_slots(slot_ids)
+        Bg = len(slot_ids)
+        self._seed_span(slot_ids, k_masked, np.zeros((Bg,), np.int32),
+                        true_lens, q_last)
+        self.invalidate(slot_ids)
 
     def on_admit_slot(self, slot: int) -> None:
         """Chunked admission: clear the slot's rows; keys arrive per chunk."""
-        sid = jax.device_put(jnp.asarray([slot], jnp.int32), self.off_dev)
-        self.summary = self.sel.reset(self.summary, sid)
+        self._reset_slots([slot])
+        self._clear_q([slot])
+        self.invalidate([slot])
+
+    def _clear_q(self, slot_ids: List[int]) -> None:
+        sid = jnp.asarray(slot_ids, jnp.int32)
         self.q_buf = self.q_buf.at[:, sid].set(0.0)
-        self.invalidate()
 
     def on_extend(self, k_span, q_last, start_np: np.ndarray,
-                  n_valid_np: np.ndarray, finished: bool) -> None:
+                  n_valid_np: np.ndarray, finished: List[int]) -> None:
         """Chunked-prefill chunk landed: ingest the span, refresh the
         stale query of every advancing slot. Counted as bulk prefill
         traffic — it is admission-time memory shipping, not the per-step
-        decode exchange."""
-        k_off = self.ledger.ship_down(k_span, self.off_dev, bulk=True)
-        q_off = self.ledger.ship_down(q_last, self.off_dev, bulk=True)
-        Bg, S = k_off.shape[1], k_off.shape[2]
-        sid = jnp.arange(Bg, dtype=jnp.int32)
-        self.summary = self._span_fn(Bg, S)(
-            self.summary, self.sp_off, k_off, sid,
-            jnp.asarray(start_np, jnp.int32),
-            jnp.asarray(n_valid_np, jnp.int32))
-        adv = jnp.asarray(n_valid_np > 0)
-        self.q_buf = jnp.where(adv[None, :, None, None],
-                               q_off.astype(self.q_buf.dtype), self.q_buf)
+        decode exchange. ``finished`` lists the slots whose payload
+        (admission prompt or retrieval splice) completed this step — only
+        THEIR lookahead rows go dirty."""
+        Bg = k_span.shape[1]
+        self._seed_span(list(range(Bg)), k_span, start_np, n_valid_np,
+                        q_last, keep_q=n_valid_np > 0)
         if finished:
-            self.invalidate()
+            self.invalidate(finished)
 
-    def invalidate(self) -> None:
-        """Drop the pending lookahead (membership of the pool changed); the
-        next decode step cold-starts a fresh selection. Both scheduling
-        modes invalidate at the same host events, so determinism holds."""
-        self.sel_buf = None
-        self._sel_inputs = None
+    def invalidate(self, slots: List[int] = None) -> None:
+        """``slots=None`` drops the whole pending lookahead (the offload
+        window itself changed — dynamic fallback); a slot list marks only
+        those rows dirty: the next decode step patches them from a fresh
+        selection and keeps every clean slot's overlapped lookahead. Both
+        scheduling modes invalidate at the same host events, so determinism
+        holds."""
+        if slots is None:
+            self.sel_buf = None
+            self._sel_inputs = None
+            self._dirty[:] = False
+        else:
+            self._dirty[list(slots)] = True
 
     # ------------------------------------------------------------------
     # decode
@@ -193,12 +310,33 @@ class HeteroExecutor:
         if offloaded:
             if self.sel_buf is None:                      # cold start
                 t0 = time.perf_counter()
-                self.sel_buf = self._launch_select(lengths_np)
+                self.sel_buf, self._sel_inputs = \
+                    self._launch_select(lengths_np)
+                self._dirty &= ~live_np
+                self.profiler.lookahead_cold += 1
                 if sync:
                     jax.block_until_ready(self.sel_buf)
                     t_sel += time.perf_counter() - t0
+            else:
+                self.profiler.lookahead_hits += 1
+                patch_rows = self._dirty & live_np
+                if patch_rows.any():
+                    # membership changed for these slots only: patch their
+                    # rows from a fresh selection, keep the overlapped
+                    # lookahead of every clean slot
+                    t0 = time.perf_counter()
+                    fresh, fresh_inputs = self._launch_select(lengths_np)
+                    self.sel_buf = self._patch(self.sel_buf, fresh,
+                                               patch_rows)
+                    self._sel_inputs = (PATCHED, self._sel_inputs,
+                                        fresh_inputs, patch_rows.copy())
+                    self._dirty &= ~patch_rows
+                    self.profiler.lookahead_patched += 1
+                    if sync:
+                        jax.block_until_ready(self.sel_buf)
+                        t_sel += time.perf_counter() - t0
             pidx_inputs = self._sel_inputs
-            pidx = self.ledger.ship_up(self.sel_buf, self.main_dev)
+            pidx = self._to_apply(self.sel_buf)
         else:
             # dynamic fallback: single-device execution, no offload work
             pidx_inputs, pidx = None, self._neg_sel
@@ -206,13 +344,13 @@ class HeteroExecutor:
 
         # pin the pre-step offload state for the lookahead (the overlapped
         # select must not see this step's keys/queries)
-        summary_prev, q_prev = self.summary, self.q_buf
+        pinned = self._pin_state()
         next_sel = next_inputs = None
         if offloaded and not sync:
             # queue select_{t+1} BEFORE apply_t: JAX async dispatch runs it
             # on the offload device while the main device decodes
-            next_sel = self._launch_select(lengths_np + live_np)
-            next_inputs = self._sel_inputs
+            next_sel, next_inputs = self._launch_select(
+                lengths_np + live_np)
 
         if sync:
             jax.block_until_ready(pidx)
@@ -228,24 +366,19 @@ class HeteroExecutor:
 
         if offloaded and sync:
             t0 = time.perf_counter()
-            next_sel = self._launch_select(lengths_np + live_np)
-            next_inputs = self._sel_inputs
+            next_sel, next_inputs = self._launch_select(
+                lengths_np + live_np)
             jax.block_until_ready(next_sel)
             t_sel += time.perf_counter() - t0
 
         # ship this step's queries/keys down; ingest into the index summary
         # (also during local fallback — the index must stay coherent for
         # when the context re-enters the offload window)
-        self.ledger.tick()
+        self._tick()
         t0 = time.perf_counter()
-        q_off = self.ledger.ship_down(q_t, self.off_dev)
-        k_off = self.ledger.ship_down(k_t, self.off_dev)
-        self.summary = self._ingest_jit(summary_prev, self.sp_off, k_off,
-                                        lengths, live)
-        self.q_buf = jnp.where(live[None, :, None, None],
-                               q_off.astype(q_prev.dtype), q_prev)
+        summary_ref = self._ingest_step(pinned, q_t, k_t, lengths, live)
         if sync:
-            jax.block_until_ready(self.summary)
+            jax.block_until_ready(summary_ref)
             if offloaded:   # local-fallback ingest is pool upkeep — not a
                 t_sel += time.perf_counter() - t0   # select-phase cost
         self.sel_buf, self._sel_inputs = next_sel, next_inputs
@@ -266,14 +399,13 @@ class HeteroExecutor:
         """Re-run the consumed selection synchronously from its pinned
         inputs: async result must be bit-identical, and every index must be
         a valid stale pick (inside the live region it was computed from)."""
-        summary, q, lengths = inputs
-        ref = jax.block_until_ready(self._select_jit(self.sp_off, summary,
-                                                     q, lengths))
+        handle = self._replay_handle(inputs)
+        ref = jax.block_until_ready(self._handle_to_pidx(handle, inputs))
         got = np.asarray(jax.block_until_ready(pidx))
         if not np.array_equal(got, np.asarray(ref)):
             raise AssertionError(
                 "overlapped selection diverged from its synchronous replay")
-        lens = np.asarray(lengths)
+        lens = np.asarray(self._pinned_lengths(inputs))
         sel_ok = (got == -1) | ((got >= 0)
                                 & (got * self.sel.page < lens[None, :, None]))
         if not sel_ok.all():

@@ -106,3 +106,19 @@ def pick_devices():
 
     devs = jax.devices()
     return (devs[0], devs[1]) if len(devs) >= 2 else (devs[0], devs[0])
+
+
+def pick_devices_sharded(n_shards: int):
+    """(main, (offload_0, ..., offload_{n-1})) for the sharded executor:
+    one offload device per KV-sequence shard.
+
+    With ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (or real
+    accelerators) shards land on devices 1..N-1 round-robin, so 1 + n_shards
+    devices give every shard its own chip while smaller topologies still
+    run (shards share offload devices; a single device degenerates every
+    transfer to a no-op, as in the unsharded executor)."""
+    import jax
+
+    devs = jax.devices()
+    pool = devs[1:] if len(devs) >= 2 else [devs[0]]
+    return devs[0], tuple(pool[i % len(pool)] for i in range(n_shards))

@@ -34,6 +34,13 @@ class HeteroProfiler:
         self.max_context = 1
         self.offload_steps = 0    # steps that actually ran the offload path
         self.local_steps = 0      # dynamic-fallback steps (single device)
+        # lookahead pipeline health (per-slot invalidation, PR 4): a step
+        # either reuses the pending overlapped selection (hit — possibly
+        # patching the rows of slots whose membership changed) or cold-starts
+        # a fresh one on the critical path.
+        self.lookahead_hits = 0
+        self.lookahead_cold = 0
+        self.lookahead_patched = 0
 
     def record_step(self, n_live: int, context: int, step_s: float,
                     select_s: Optional[float] = None,
@@ -92,6 +99,9 @@ class HeteroProfiler:
             "tokens": self.tokens,
             "offload_steps": self.offload_steps,
             "local_fallback_steps": self.local_steps,
+            "lookahead": {"hits": self.lookahead_hits,
+                          "cold_starts": self.lookahead_cold,
+                          "patched": self.lookahead_patched},
             "max_context": self.max_context,
             "step_s_total": self.step_s,
             "us_per_step": 1e6 * self.step_s / max(self.steps, 1),

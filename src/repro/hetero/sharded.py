@@ -1,0 +1,212 @@
+"""Sharded hetero offload: one offload device per KV-sequence shard (§5.2,
+Fig. 6a at scale — HGCA/HeteGen-style memory-side parallelism).
+
+``ShardedHeteroExecutor`` generalizes the two-device ``HeteroExecutor`` to a
+``(main, offload_0..offload_{n-1})`` topology. The logical token space
+[0, max_len) is cut into ``n_shards`` contiguous windows; each offload
+device keeps the incremental page-summary index of ITS window only (dsa
+indexer sums / seer gate sums / lserve min-max bounds, built by
+``hetero.select`` with a static shard window) and answers the lookahead
+query with its local top-k candidates.
+
+What crosses which link, per decode step:
+
+  main -> shard_s   this step's per-layer queries + new keys (the shard
+                    masks what it does not own — index maintenance);
+  shard_s -> main   (vals, idx) candidate pairs in GLOBAL page coordinates:
+                    8 bytes per candidate, ``n_part <= n_sel`` candidates —
+                    the index-only exchange, O(k * shards) total, never a
+                    raw score vector and never a KV page;
+  main              candidate merge (top-k over shard-ordered lists) +
+                    the apply phase over the paged pool.
+
+Because per-page summary scores are independent of the window extent and
+top-k tie-breaking on shard-ordered candidates matches a global top-k, the
+merged selection is BIT-IDENTICAL to the single-offload-device executor's —
+``offload_shards=2`` serves the same tokens as ``offload_shards=1`` in both
+scheduling modes (tests/test_hetero_sharded.py). Each shard gets its own
+``TransferLedger`` so the report shows per-link traffic and the O(k*shards)
+exchange win.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, MemoryConfig
+from repro.hetero import policy as hpolicy
+from repro.hetero.executor import HeteroExecutor
+from repro.hetero.select import make_offload_select
+from repro.hetero.transfer import TransferLedger
+
+
+class ShardedHeteroExecutor(HeteroExecutor):
+    def __init__(self, cfg: ArchConfig, mem: MemoryConfig, sc,
+                 sparse_params, *, mode: str = "overlap",
+                 validate: bool = False, n_shards: int = 2, devices=None):
+        assert n_shards >= 1, n_shards
+        assert sc.max_len % n_shards == 0, (sc.max_len, n_shards)
+        self.n_shards = n_shards
+        if devices is None:
+            main, offs = hpolicy.pick_devices_sharded(n_shards)
+        else:
+            main, offs = devices
+            offs = tuple(offs)
+            assert len(offs) == n_shards, (len(offs), n_shards)
+        self.off_devs = offs
+        super().__init__(cfg, mem, sc, sparse_params, mode=mode,
+                         validate=validate, devices=(main, offs[0]))
+        local = sc.max_len // n_shards
+        assert local % self.sel.page == 0, \
+            f"shard window {local} must align to the selection page " \
+            f"({self.sel.page})"
+
+    # ------------------------------------------------------------------
+    # offload-resident state: one summary shard per device
+    # ------------------------------------------------------------------
+
+    def _init_offload_state(self, sparse_params) -> None:
+        cfg, sc = self.cfg, self.sc
+        n = self.n_shards
+        local = sc.max_len // n
+        self.shards = [
+            make_offload_select(sc.method, cfg, self.mem, dsa_page=sc.page,
+                                n_slots=sc.n_slots, max_len=sc.max_len,
+                                window=(s * local, local))
+            for s in range(n)
+        ]
+        self.ledgers = [TransferLedger() for _ in range(n)]
+        self.sp_offs = [jax.device_put(sparse_params, d)
+                        for d in self.off_devs]
+        self.summaries = [jax.device_put(sh.summary_init(), d)
+                          for sh, d in zip(self.shards, self.off_devs)]
+        from repro.models import layers as L
+        hp = cfg.padded_heads(sc.tp)
+        q0 = jnp.zeros((cfg.n_layers, sc.n_slots, hp, cfg.hd),
+                       L.dtype_of(cfg))
+        self.q_bufs = [jax.device_put(q0, d) for d in self.off_devs]
+        self._partial_jits = [jax.jit(sh.select_partial)
+                              for sh in self.shards]
+        self._ingest_jits = [jax.jit(sh.ingest) for sh in self.shards]
+        self._finalize_jit = jax.jit(self.sel.finalize)
+
+    # ------------------------------------------------------------------
+    # selection-state primitives
+    # ------------------------------------------------------------------
+
+    def _launch_select(self, lengths_np: np.ndarray):
+        """Queue the fused relevancy+top-k on EVERY shard device (async
+        dispatch runs them concurrently). Handle = per-shard (vals, idx)
+        candidate pairs in global page coordinates."""
+        lengths = jnp.asarray(lengths_np, jnp.int32)
+        handles, pins = [], []
+        for s in range(self.n_shards):
+            inputs = (self.summaries[s], self.q_bufs[s], lengths)
+            handles.append(self._partial_jits[s](self.sp_offs[s], *inputs))
+            pins.append(inputs)
+        return handles, pins
+
+    def _select_from_pinned(self, inputs):
+        return [self._partial_jits[s](self.sp_offs[s], *inputs[s])
+                for s in range(self.n_shards)]
+
+    def _raw_lengths(self, inputs):
+        return inputs[0][2]
+
+    def _merge(self, ups, lengths):
+        """Merge shard candidate lists (already on the main device) into
+        the final pidx. Shard order = ascending window order, so top-k
+        tie-breaking matches the unsharded selection exactly."""
+        vals = jnp.concatenate([u[0] for u in ups], axis=-1)
+        idx = jnp.concatenate([u[1] for u in ups], axis=-1)
+        return self._finalize_jit(vals, idx, lengths)
+
+    def _to_apply(self, handle):
+        """Index-only up exchange: ship each shard's (vals, idx) pairs —
+        8 bytes per candidate — and merge on the main device."""
+        ups = [self.ledgers[s].ship_up(handle[s], self.main_dev)
+               for s in range(self.n_shards)]
+        return self._merge(ups, self._pinned_lengths(self._sel_inputs))
+
+    def _handle_to_pidx(self, handle, inputs):
+        ups = [jax.device_put(h, self.main_dev) for h in handle]
+        return self._merge(ups, self._pinned_lengths(inputs))
+
+    def _pin_state(self):
+        return list(self.summaries), list(self.q_bufs)
+
+    def _ingest_step(self, pinned, q_t, k_t, lengths, live):
+        sums, qs = pinned
+        for s in range(self.n_shards):
+            q_off = self.ledgers[s].ship_down(q_t, self.off_devs[s])
+            k_off = self.ledgers[s].ship_down(k_t, self.off_devs[s])
+            self.summaries[s] = self._ingest_jits[s](
+                sums[s], self.sp_offs[s], k_off, lengths, live)
+            self.q_bufs[s] = self._blend_q(qs[s], q_off, None, live)
+        return self.summaries
+
+    def _tick(self) -> None:
+        for led in self.ledgers:
+            led.tick()
+
+    # ------------------------------------------------------------------
+    # admission / prefill hooks
+    # ------------------------------------------------------------------
+
+    def _reset_slots(self, slot_ids: List[int]) -> None:
+        sid = jnp.asarray(slot_ids, jnp.int32)
+        for s in range(self.n_shards):
+            self.summaries[s] = self.shards[s].reset(self.summaries[s], sid)
+
+    def _clear_q(self, slot_ids: List[int]) -> None:
+        sid = jnp.asarray(slot_ids, jnp.int32)
+        for s in range(self.n_shards):
+            self.q_bufs[s] = self.q_bufs[s].at[:, sid].set(0.0)
+
+    def _seed_span(self, slot_ids, k_masked, start_np, n_valid_np, q_last,
+                   *, keep_q: np.ndarray = None) -> None:
+        """Route the span to every shard; each shard's windowed ingest
+        keeps exactly the pages it owns (splices and chunked extends land
+        on the owning shard's index)."""
+        sid = jnp.asarray(slot_ids, jnp.int32)
+        start = jnp.asarray(start_np, jnp.int32)
+        n_valid = jnp.asarray(n_valid_np, jnp.int32)
+        for s in range(self.n_shards):
+            k_off = self.ledgers[s].ship_down(k_masked, self.off_devs[s],
+                                              bulk=True)
+            q_off = self.ledgers[s].ship_down(q_last, self.off_devs[s],
+                                              bulk=True)
+            Bg, S = k_off.shape[1], k_off.shape[2]
+            key = (s, Bg, S)
+            if key not in self._span_jits:
+                self._span_jits[key] = jax.jit(self.shards[s].ingest_span)
+            self.summaries[s] = self._span_jits[key](
+                self.summaries[s], self.sp_offs[s], k_off, sid, start,
+                n_valid)
+            self.q_bufs[s] = self._blend_q(self.q_bufs[s], q_off, sid,
+                                           keep_q)
+
+    # ------------------------------------------------------------------
+
+    def report(self) -> Dict:
+        self.ledger = TransferLedger.combine(self.ledgers)
+        d = super().report()
+        d["devices"] = {
+            "main": str(self.main_dev),
+            "offload": [str(x) for x in self.off_devs],
+            "distinct": any(x != self.main_dev for x in self.off_devs),
+        }
+        d["shards"] = {
+            "n_shards": self.n_shards,
+            "window_tokens": self.sc.max_len // self.n_shards,
+            "windows": [[sh.tok_lo, sh.tok_lo + sh.n_tok]
+                        for sh in self.shards],
+            "candidates_per_shard": self.shards[0].n_part,
+            "per_shard_transfer": [led.as_dict() for led in self.ledgers],
+            "distinct_offload_devices": len({str(x)
+                                             for x in self.off_devs}),
+        }
+        return d

@@ -33,6 +33,20 @@ class TransferLedger:
         self.span_bytes = 0      # retrieved doc-token / embedding payloads
         self.steps = 0
 
+    @staticmethod
+    def combine(ledgers) -> "TransferLedger":
+        """Aggregate per-shard ledgers (sharded offload keeps one per
+        offload device so the report can show each link's traffic): bytes
+        sum across links, steps are the shared step clock (max)."""
+        out = TransferLedger()
+        for led in ledgers:
+            out.down_bytes += led.down_bytes
+            out.bulk_bytes += led.bulk_bytes
+            out.up_bytes += led.up_bytes
+            out.span_bytes += led.span_bytes
+            out.steps = max(out.steps, led.steps)
+        return out
+
     # -- counted device_put wrappers -----------------------------------
 
     def ship_down(self, tree, device, *, bulk: bool = False):

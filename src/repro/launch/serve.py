@@ -47,6 +47,10 @@ def main(argv=None):
     ap.add_argument("--offload", default="off",
                     choices=["on", "off", "sync", "overlap"],
                     help="hetero offload executor (on = overlap)")
+    ap.add_argument("--offload-shards", type=int, default=1,
+                    help="KV-sequence shards on the offload side (one "
+                         "device per shard; launch with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N+1)")
     ap.add_argument("--retrieval", default="off",
                     choices=["on", "off", "inline", "sync", "overlap"],
                     help="document-memory service (on = overlap)")
@@ -91,6 +95,8 @@ def main(argv=None):
                  ServeConfig(max_len=args.prompt_len + args.max_new + extra,
                              n_slots=args.slots, method=args.method,
                              tp=args.tp, page=8, offload=offload,
+                             offload_shards=(args.offload_shards
+                                             if offload != "off" else 1),
                              retrieval=retrieval),
                  key=jax.random.PRNGKey(1))
     sch = Scheduler(eng)
@@ -102,7 +108,9 @@ def main(argv=None):
     done = sch.run()
     wall = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in done.values())
-    print(f"method={args.method} offload={offload} "
+    shards = args.offload_shards if offload != "off" else 1
+    print(f"method={args.method} offload={offload}"
+          f"{f'/shards={shards}' if shards > 1 else ''} "
           f"retrieval={ret_mode or 'off'}: "
           f"{len(done)}/{args.requests} requests, "
           f"{toks} tokens, {toks / wall:.1f} tok/s")

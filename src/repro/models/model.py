@@ -530,7 +530,8 @@ def decode_step_paged(params, cfg: ArchConfig, token, pool, live, *,
 
 
 def decode_step_paged_presel(params, cfg: ArchConfig, token, pool, live,
-                             pidx, mem, *, page_size: int, tp: int = 16):
+                             pidx, mem, *, page_size: int, tp: int = 16,
+                             page_attn=None):
     """Apply-phase decode over the paged pool with PRE-SELECTED pages.
 
     The hetero offload split (paper §5): prepare/relevancy/retrieve ran
@@ -549,6 +550,12 @@ def decode_step_paged_presel(params, cfg: ArchConfig, token, pool, live,
       * the paper's dynamic fallback stays a traced cond: outside
         [min_context, fallback_context] the step runs dense attention and
         ignores the selection entirely (single-device execution).
+
+    ``page_attn`` overrides the selected-page attention implementation
+    (same contract as ``ops.paged_decode_attention``: (q, kc, vc, pids,
+    lengths, page_size=) -> (out, lse)). The sharded-offload stack uses it
+    to run ``distributed.topk.distributed_paged_sparse_decode`` when the
+    main side is itself a mesh (LSE-merged sequence-parallel apply).
 
     Returns (logits [B, V], pool', q_layers [L, B, Hp, hd], k_layers
     [L, B, KV, hd]) — the per-layer query/key of THIS step feed the next
@@ -588,7 +595,8 @@ def decode_step_paged_presel(params, cfg: ArchConfig, token, pool, live,
             s = jnp.where(sel == cur_page[:, None], -1, sel)   # dedup recency
             s = jnp.where(s * ps < lb[:, None], s, -1)         # validity mask
             s_full = jnp.concatenate([s, cur_page[:, None]], axis=1)
-            out, _ = ops.paged_decode_attention(
+            attn_fn = page_attn or ops.paged_decode_attention
+            out, _ = attn_fn(
                 strip_dead_heads(q, cfg), kc, vc, s_full.astype(jnp.int32),
                 lb, page_size=ps)
             return repad_dead_heads(out, q, cfg)

@@ -69,6 +69,12 @@ class ServeConfig:
     # a sparse method (dsa | seer | lserve).
     offload: str = "off"
     offload_validate: bool = False  # replay each consumed selection + check
+    # >1 shards the offload side over one device per KV-sequence shard
+    # (hetero.sharded.ShardedHeteroExecutor): each shard keeps the page
+    # summaries of its contiguous token window and ships only top-k
+    # (vals, idx) candidates; the merged selection is bit-identical to
+    # offload_shards=1 in both scheduling modes.
+    offload_shards: int = 1
     # --- retrieval subsystem (src/repro/retrieval) ---
     # A repro.retrieval.RetrievalConfig enables the document-memory service:
     # per-slot FLARE/DRAGIN triggers over the pooled decode logits, dynamic
@@ -93,6 +99,9 @@ class Engine:
         if sc.method == "none":
             gran = 1
         gran = math.lcm(gran, sc.kv_page_size if sc.paged else 1)
+        # sharded offload: every shard window must cover a whole number of
+        # selection pages AND kv pages, so align max_len to gran * shards
+        gran *= max(sc.offload_shards, 1)
         if sc.max_len % gran:
             sc = dataclasses.replace(
                 sc, max_len=((sc.max_len + gran - 1) // gran) * gran)
@@ -138,10 +147,20 @@ class Engine:
             assert sc.method in ("dsa", "seer", "lserve"), \
                 "hetero offload needs a sparse memory-processing method"
             assert cfg.family in POOL_FAMILIES
-            from repro.hetero import HeteroExecutor
-            self.hetero = HeteroExecutor(
-                cfg, self.mem, self.sc, self.sparse_params,
-                mode=sc.offload, validate=sc.offload_validate)
+            if sc.offload_shards > 1:
+                from repro.hetero import ShardedHeteroExecutor
+                self.hetero = ShardedHeteroExecutor(
+                    cfg, self.mem, self.sc, self.sparse_params,
+                    mode=sc.offload, validate=sc.offload_validate,
+                    n_shards=sc.offload_shards)
+            else:
+                from repro.hetero import HeteroExecutor
+                self.hetero = HeteroExecutor(
+                    cfg, self.mem, self.sc, self.sparse_params,
+                    mode=sc.offload, validate=sc.offload_validate)
+        else:
+            assert sc.offload_shards <= 1, \
+                "offload_shards needs ServeConfig(offload='sync'|'overlap')"
 
         self.retrieval = None
         if sc.retrieval is not None:
@@ -446,18 +465,22 @@ class Engine:
         self.pool.device["v_pages"] = pool["v_pages"]
         self.stats["prefill_s"] += time.perf_counter() - t0
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-        finished = False
-        for slot in list(self._chunks):
+        finished: List[int] = []     # slots whose payload (admission
+        for slot in list(self._chunks):  # prompt or splice) completed
+
             rid, payload, pos, is_emb = self._chunks[slot]
             take = int(n_valid[slot])
             self.slots.slots[slot].length += take
             if pos + take >= len(payload):
                 self._pending[slot] = nxt[slot]
                 del self._chunks[slot]
-                finished = True
+                finished.append(slot)
             else:
                 self._chunks[slot][2] = pos + take
         if self.hetero is not None:
+            # per-slot lookahead invalidation: only the finishing slots'
+            # selection rows go dirty — a retrieval splice landing in one
+            # slot no longer discards every other slot's valid lookahead
             k_span, q_last = out[2], out[3]
             self.hetero.on_extend(k_span, q_last, lengths, n_valid, finished)
         return True
@@ -590,7 +613,8 @@ class Engine:
         if payload is None or len(payload) == 0:
             return
         s = self.slots.slots[slot]
-        self._chunks[slot] = [s.request_id, payload, 0, embeds is not None]
+        self._chunks[slot] = [s.request_id, payload, 0,
+                              embeds is not None]
         self.retrieval.note_splice(
             slot, tokens if tokens is not None else len(embeds))
 

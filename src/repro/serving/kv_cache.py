@@ -169,6 +169,28 @@ class PagedKVPool:
     def _push_table(self) -> None:
         self.device["page_table"] = jnp.asarray(self.table)
 
+    def shard_owners(self, n_shards: int) -> np.ndarray:
+        """Logical page -> owning offload shard, [pages_per_slot].
+
+        The sharded hetero executor cuts the logical token space into
+        ``n_shards`` contiguous windows; logical page ``p`` of every slot
+        belongs to shard ``p // (pages_per_slot // n_shards)``. This is the
+        authoritative page->shard map the executor's static ingest windows
+        must agree with (tests assert the correspondence), and what routes
+        a splice / chunked extend to the owning shard's index."""
+        assert self.pages_per_slot % n_shards == 0, \
+            (self.pages_per_slot, n_shards)
+        return np.repeat(np.arange(n_shards),
+                         self.pages_per_slot // n_shards)
+
+    def shard_table_view(self, n_shards: int, shard: int) -> np.ndarray:
+        """The slice of every slot's page table owned by ``shard``:
+        [n_slots, pages_per_slot // n_shards] physical page ids (0 = the
+        reserved zero page for unallocated entries, which scores exactly
+        like dead context on the shard's summary)."""
+        own = self.shard_owners(n_shards) == shard
+        return self.table[:, own]
+
     def pages_in_use(self) -> int:
         return sum(len(o) for o in self.owned)
 
