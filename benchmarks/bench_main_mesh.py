@@ -1,0 +1,154 @@
+"""Sequence-parallel apply on the main mesh (paper Fig. 6a end to end).
+
+Two measurements over the ``ServeConfig(main_mesh=N)`` serving path:
+
+  * per-step pooled-decode wall time with the apply phase running on a
+    1- vs 2-device main mesh (bit-exactness across mesh sizes is pinned by
+    tests/test_main_mesh.py — timing deltas are pure scheduling/exchange
+    cost or win), standalone and composed with ``offload_shards=2``;
+  * the (out, lse)-ONLY EXCHANGE INVARIANT, machine-readably: the compiled
+    HLO of the LSE-merged apply is walked (``launch.hlo_walk``, trip-count
+    aware) and its all-gather traffic must equal the analytic
+    ``n_shards * B * Hq * (dh + 1) * 4`` bytes — independent of the view
+    length S and of the selection width k, because only (out [B, Hq, dh],
+    lse [B, Hq]) fp32 pairs ever cross the mesh. Raw scores would be O(S);
+    KV pages would be O(k * page * KV * dh). The walk also pins all OTHER
+    collective bytes at zero: nothing else crosses.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (CI's
+bench-smoke does) for a real 2-device mesh; on fewer devices the mesh
+clamps and the strict exchange assertion is skipped (recorded as
+``mesh_devices < 2``).
+
+Direct invocation: ``python benchmarks/bench_main_mesh.py --smoke``.
+"""
+import functools
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_cfg, pick, record_result, row
+from repro.distributed.topk import distributed_paged_sparse_decode
+from repro.launch import hlo_walk
+from repro.launch.mesh import mesh_from_devices
+from repro.models import init_params
+from repro.serving import Engine, ServeConfig
+
+REPEATS = 3
+
+
+def _exchange_bytes(mesh, B, Hq, KV, dh, S, k, ps):
+    """Compiled all-gather bytes of one LSE-merged apply at (S, k)."""
+    q = jnp.zeros((B, Hq, dh), jnp.float32)
+    kc = jnp.zeros((B, S, KV, dh), jnp.float32)
+    pids = jnp.zeros((B, k), jnp.int32)
+    lens = jnp.zeros((B,), jnp.int32)
+    fn = jax.jit(functools.partial(distributed_paged_sparse_decode,
+                                   mesh=mesh, axis="seq", page_size=ps))
+    hlo = fn.lower(q, kc, kc, pids, lens).compile().as_text()
+    c = hlo_walk.walk(hlo)
+    other = c.coll_bytes - c.per_collective["all-gather"]
+    return c.per_collective["all-gather"], other
+
+
+def _serve_steps(cfg, params, mesh_n, shards, *, prompt_len, steps, n_slots,
+                 page):
+    total = 2 + REPEATS * steps + 4
+    sc = ServeConfig(max_len=prompt_len + total + 2 * page, n_slots=n_slots,
+                     method="dsa", tp=4, page=page, kv_page_size=16,
+                     offload="overlap", offload_shards=shards,
+                     main_mesh=mesh_n)
+    eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    reqs = [(i, rng.integers(0, cfg.vocab_size, size=prompt_len)
+             .astype(np.int32), total) for i in range(n_slots)]
+    assert all(eng.admit_many(reqs))
+    for _ in range(2):                      # compile + pipeline warm-up
+        eng.step_pool()
+    reps = []
+    for _ in range(pick(REPEATS, 1)):
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            eng.step_pool()
+        reps.append((time.perf_counter() - t0) / steps)
+    return eng, float(np.min(reps))
+
+
+def run():
+    cfg = bench_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
+    prompt_len = pick(192, 32)
+    steps = pick(24, 3)
+    n_slots = pick(4, 2)
+
+    # -- serving wall time: mesh 1 vs 2, standalone and with 2 offload
+    #    shards (4 devices: mesh {0,1}, selection shards {2,3}) ----------
+    per_step = {}
+    for mesh_n, shards in ((1, 1), (2, 1), (2, 2)):
+        eng, s = _serve_steps(cfg, params, mesh_n, shards,
+                              prompt_len=prompt_len, steps=steps,
+                              n_slots=n_slots, page=16)
+        per_step[(mesh_n, shards)] = s
+        rep = eng.hetero.report()
+        mesh_devs = rep["devices"].get("main_mesh", [])
+        yield row(f"main_mesh_decode_mesh{mesh_n}_shards{shards}", s,
+                  f"{n_slots}x{prompt_len}+{steps},"
+                  f"mesh_devices={len(set(mesh_devs)) or 1}")
+        record_result("main_mesh", f"dsa_mesh{mesh_n}_shards{shards}", {
+            "us_per_step": 1e6 * s,
+            "tokens_per_s": n_slots / s,
+            "main_mesh": mesh_n,
+            "offload_shards": shards,
+            "devices": jax.device_count(),
+            "mesh_devices": len(set(mesh_devs)) or 1,
+            "vs_mesh1_speedup": per_step[(1, 1)] / s,
+        })
+
+    # -- (out, lse)-only exchange: all-gather bytes equal the analytic
+    #    formula and DO NOT move with S or k ---------------------------
+    n_mesh = min(2, jax.device_count())
+    mesh = mesh_from_devices(jax.devices()[:n_mesh], ("seq",))
+    B, Hq, KV, dh, ps = 2, cfg.n_heads, cfg.n_kv_heads, cfg.hd, 16
+    expect = n_mesh * B * Hq * (dh + 1) * 4       # (out, lse) fp32 pairs
+    grid = {}
+    for S in (pick(2048, 256), pick(4096, 512)):
+        for k in (4, 16):
+            ag, other = _exchange_bytes(mesh, B, Hq, KV, dh, S, k, ps)
+            grid[f"S{S}_k{k}"] = {"all_gather_bytes": ag,
+                                  "other_collective_bytes": other}
+    ags = {v["all_gather_bytes"] for v in grid.values()}
+    others = {v["other_collective_bytes"] for v in grid.values()}
+    exchange_ok = (n_mesh < 2) or (ags == {expect} and others == {0.0})
+    if n_mesh >= 2:
+        assert exchange_ok, (grid, expect)
+    record_result("main_mesh", "exchange_out_lse_only", {
+        "mesh_devices": n_mesh,
+        "expected_bytes": expect,
+        "independent_of_S_and_k": len(ags) == 1,
+        "exchange_ok": exchange_ok,
+        "grid": grid,
+    })
+    yield row("main_mesh_exchange_bytes", 0.0,
+              f"allgather={max(ags):.0f}B,expect={expect}B,"
+              f"ok={exchange_ok}")
+    yield row("main_mesh_scaling", per_step[(2, 2)],
+              f"mesh1={1e6 * per_step[(1, 1)]:.0f}us,"
+              f"mesh2+shards2={1e6 * per_step[(2, 2)]:.0f}us")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks import common
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    common.set_smoke(ap.parse_args().smoke)
+    for r in run():
+        print(r, flush=True)

@@ -1,8 +1,11 @@
 """Benchmark orchestrator — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes the
 structured payloads modules deposit via ``common.record_result`` to
-``BENCH_PR4.json`` at the repo root (method, tokens/s, per-stage
-fractions, ...) so the perf trajectory is diffable across PRs.
+``--out`` (default ``BENCH_PR5.json``) at the repo root (method, tokens/s,
+per-stage fractions, ...) AND to the stable ``BENCH.json`` "latest" alias,
+so the perf trajectory is diffable across PRs from one canonical filename
+(the per-PR path used to be hardcoded, which left every later PR's
+trajectory empty).
 
 ``--smoke``: tiny configs and single iterations (run in CI so benchmark code
 can't silently rot). Smoke numbers are execution proofs, not measurements.
@@ -22,7 +25,8 @@ from benchmarks import common
 from benchmarks import (bench_memory_fraction, bench_kernel_speedup,
                         bench_e2e, bench_energy, bench_batch_scaling,
                         bench_comm_bytes, bench_hetero_overlap,
-                        bench_hetero_sharded, bench_retrieval)
+                        bench_hetero_sharded, bench_retrieval,
+                        bench_main_mesh)
 
 BENCHES = [
     ("memory_fraction (Fig 3/4/5)", bench_memory_fraction),
@@ -34,10 +38,12 @@ BENCHES = [
     ("hetero_overlap (§5.3 offload)", bench_hetero_overlap),
     ("hetero_sharded (Fig 6a per-shard offload)", bench_hetero_sharded),
     ("retrieval (dynamic RAG/MaC service)", bench_retrieval),
+    ("main_mesh (Fig 6a seq-parallel apply)", bench_main_mesh),
 ]
 
-JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_PR4.json")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_PR5.json")
+LATEST = os.path.join(ROOT, "BENCH.json")   # stable cross-PR alias
 
 
 def main() -> None:
@@ -46,6 +52,11 @@ def main() -> None:
                     help="tiny configs, 1 iteration (CI execution check)")
     ap.add_argument("--only", default="",
                     help="run only benches whose label contains this")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help="structured-results path; when it is the default "
+                         "per-PR artifact the stable BENCH.json latest "
+                         "alias is refreshed alongside it (a scratch --out "
+                         "leaves the committed alias untouched)")
     args = ap.parse_args()
     common.set_smoke(args.smoke)
     print("name,us_per_call,derived")
@@ -66,22 +77,26 @@ def main() -> None:
                   traceback.format_exc().replace("\n", "\n# "), flush=True)
     payload = {"smoke": common.is_smoke(), "results": common.results(),
                "rows": rows}
-    if (args.only or failures) and os.path.exists(JSON_PATH):
+    if (args.only or failures) and os.path.exists(args.out):
         # partial or partially-failed run: refresh the sections + rows that
         # actually ran; keep the rest of the committed cross-PR artifact
         # intact (every results payload carries its own "smoke" stamp from
         # common.record_result)
-        with open(JSON_PATH) as f:
+        with open(args.out) as f:
             old = json.load(f)
         old.setdefault("results", {}).update(payload["results"])
         by_name = {r.split(",", 1)[0]: r for r in rows}
         old["rows"] = [by_name.pop(r.split(",", 1)[0], r)
                        for r in old.get("rows", [])] + list(by_name.values())
         payload = old
-    with open(JSON_PATH, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# wrote {JSON_PATH}", flush=True)
+    paths = [args.out]
+    if os.path.abspath(args.out) == os.path.abspath(DEFAULT_OUT):
+        paths.append(LATEST)     # the alias tracks the canonical artifact
+    for path in paths:
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {path}", flush=True)
     if failures:
         sys.exit(1)
 

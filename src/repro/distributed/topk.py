@@ -138,38 +138,16 @@ def distributed_sparse_decode(
 ):
     """Sequence-parallel sparse decode: each shard attends to ITS selected
     pages; only (out, lse) pairs cross the mesh (FlashDecoding LSE merge).
-    Exchanged bytes: O(B * Hq * dh * n_shards) — independent of S and k."""
-    axes = _axes_tuple(axis)
-    n_shards = _n_shards(mesh, axes)
-    S = k_cache.shape[1]
-    local_S = S // n_shards
-    local_pages = local_S // page_size
-    ba = batch_axis
+    Exchanged bytes: O(B * Hq * dh * n_shards) — independent of S and k.
 
-    def local_fn(q_l, kc_l, vc_l, pids, len_g):
-        shard = _shard_index(mesh, axes)
-        local = pids - shard * local_pages
-        mine = (pids >= 0) & (local >= 0) & (local < local_pages)
-        local = jnp.where(mine, local, -1)
-        len_l = jnp.clip(len_g - shard * local_S, 0, local_S)
-        out, lse = ops.paged_decode_attention(
-            q_l, kc_l, vc_l, local.astype(jnp.int32), len_l,
-            page_size=page_size)
-        outs = jax.lax.all_gather(out, axes)   # [n_shards, B, Hq, dh]
-        lses = jax.lax.all_gather(lse, axes)
-        merged, _ = ops.lse_merge(outs, lses)
-        return merged
-
-    seq_spec = axes if len(axes) > 1 else axes[0]
-    fn = shard_map(
-        local_fn,
-        mesh=mesh,
-        in_specs=(P(ba), P(ba, seq_spec, None, None),
-                  P(ba, seq_spec, None, None), P(ba), P(ba)),
-        out_specs=P(ba),
-        check_rep=False,
-    )
-    return fn(q, k_cache, v_cache, page_ids, length)
+    Thin dense-contract wrapper over ``distributed_paged_sparse_decode``
+    (ONE shard body for both: a second copy of the merge math drifted once
+    and could not feed LSE-merging callers) — the LSE is dropped for
+    callers that only want the merged output."""
+    out, _ = distributed_paged_sparse_decode(
+        q, k_cache, v_cache, page_ids, length, mesh, axis,
+        page_size=page_size, batch_axis=batch_axis)
+    return out
 
 
 def distributed_paged_sparse_decode(
@@ -184,8 +162,10 @@ def distributed_paged_sparse_decode(
     page_size: int = 64,
     batch_axis=None,
 ):
-    """``distributed_sparse_decode`` extended to the SERVING pool contract
-    (paper Fig. 6a applied to the engine's paged KV pool):
+    """The ONE LSE-merged sequence-parallel apply core (paper Fig. 6a),
+    stated for the SERVING pool contract — the dense per-request layout of
+    ``distributed_sparse_decode`` is the special case where lengths are
+    broadcast and the view has no holes:
 
       * ``k_cache``/``v_cache`` are the gathered paged-pool view
         (``kernels.page_pool.pool_gather`` over the slot's page table) —

@@ -67,11 +67,23 @@ PATCHED = "patched"   # tag of composite pinned-input records
 class HeteroExecutor:
     def __init__(self, cfg: ArchConfig, mem: MemoryConfig, sc,
                  sparse_params, *, mode: str = "overlap",
-                 validate: bool = False, devices=None):
+                 validate: bool = False, devices=None, main_mesh=None):
         assert mode in ("sync", "overlap"), mode
         self.cfg, self.mem, self.sc, self.mode = cfg, mem, sc, mode
         self.validate = validate
         self.main_dev, self.off_dev = devices or hpolicy.pick_devices()
+        # main side as a MESH: the apply phase runs sequence-parallel over
+        # it (distributed_paged_sparse_decode through the page_attn seam).
+        # Everything the apply jit consumes must then be committed to the
+        # mesh (replicated) rather than to a single main device — a
+        # single-device-committed pidx next to mesh-committed pool buffers
+        # is a jit device-assignment conflict — so ship_up targets
+        # ``_apply_target`` instead of ``main_dev``.
+        self.main_mesh = main_mesh
+        self._apply_target = self.main_dev
+        if main_mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._apply_target = NamedSharding(main_mesh, PartitionSpec())
         self.sel = make_offload_select(sc.method, cfg, mem,
                                        dsa_page=sc.page,
                                        n_slots=sc.n_slots,
@@ -85,7 +97,7 @@ class HeteroExecutor:
         self._dirty = np.zeros((sc.n_slots,), bool)  # rows needing a patch
         self._neg_sel = jax.device_put(
             jnp.full((cfg.n_layers, sc.n_slots, self.sel.n_sel), -1,
-                     jnp.int32), self.main_dev)
+                     jnp.int32), self._apply_target)
         self._init_offload_state(sparse_params)
 
         self._span_jits: Dict[Tuple, callable] = {}
@@ -119,13 +131,26 @@ class HeteroExecutor:
     def _apply_fn(self, n_pages_view: int):
         if n_pages_view not in self._apply_jits:
             cfg, mem, sc, ps = self.cfg, self.mem, self.sc, self.sel.page
+            page_attn = None
+            if self.main_mesh is not None:
+                import functools
+
+                from repro.distributed.topk import \
+                    distributed_paged_sparse_decode
+                page_attn = functools.partial(
+                    distributed_paged_sparse_decode, mesh=self.main_mesh,
+                    axis="seq")
+            # donation stays on under the mesh: the pool buffers are
+            # committed replicated (engine._ensure_pool), so input and
+            # output shardings match and XLA can update in place
             self._apply_jits[n_pages_view] = jax.jit(
                 lambda p, tok, kp, vp, table, lengths, live, pidx:
                 M.decode_step_paged_presel(
                     p, cfg, tok,
                     {"k_pages": kp, "v_pages": vp, "page_table": table,
                      "lengths": lengths},
-                    live, pidx, mem, page_size=ps, tp=sc.tp),
+                    live, pidx, mem, page_size=ps, tp=sc.tp,
+                    page_attn=page_attn),
                 donate_argnums=(2, 3))
         return self._apply_jits[n_pages_view]
 
@@ -147,9 +172,11 @@ class HeteroExecutor:
         return self._select_jit(self.sp_off, *inputs), inputs
 
     def _to_apply(self, handle):
-        """Ship the consumable selection to the main device as pidx
-        [L, B, n_sel] (the index-only up exchange)."""
-        return self.ledger.ship_up(handle, self.main_dev)
+        """Ship the consumable selection to the apply side as pidx
+        [L, B, n_sel] (the index-only up exchange) — a single main device,
+        or replicated over the main mesh when the apply is
+        sequence-parallel."""
+        return self.ledger.ship_up(handle, self._apply_target)
 
     def _patch(self, old, fresh, dirty_np: np.ndarray):
         """Row-patch a pending selection handle: dirty slots take the fresh
@@ -421,6 +448,9 @@ class HeteroExecutor:
         d["devices"] = {"main": str(self.main_dev),
                         "offload": str(self.off_dev),
                         "distinct": self.main_dev != self.off_dev}
+        if self.main_mesh is not None:
+            d["devices"]["main_mesh"] = [
+                str(x) for x in self.main_mesh.devices.flat]
         d["plan"] = {"stages": dict(self.plan.stages),
                      "offloaded": list(self.plan.offloaded())}
         return d

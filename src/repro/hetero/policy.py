@@ -108,6 +108,28 @@ def pick_devices():
     return (devs[0], devs[1]) if len(devs) >= 2 else (devs[0], devs[0])
 
 
+def pick_devices_mesh(n_main: int, n_shards: int = 1):
+    """(main mesh devices, offload shard devices) for the fully sharded
+    topology — N apply shards on a real MAIN mesh composing with M
+    selection shards: mesh devices are [0, n), offload shards round-robin
+    over the remainder (over everything when devices run short, as in
+    ``pick_devices_sharded``).
+
+    A JAX mesh cannot repeat a device, so when fewer than ``n_main``
+    devices exist the mesh clamps to the largest DIVISOR of the request
+    that fits — a divisor, not a plain min, so the engine's view alignment
+    (granularity a multiple of the REQUESTED mesh) still divides the
+    clamped shard count and ``S % (n_shards * page_size) == 0`` holds."""
+    import jax
+
+    devs = jax.devices()
+    n = max(d for d in range(1, n_main + 1)
+            if n_main % d == 0 and d <= len(devs))
+    mains = tuple(devs[:n])
+    pool = devs[n:] if len(devs) > n else devs
+    return mains, tuple(pool[i % len(pool)] for i in range(n_shards))
+
+
 def pick_devices_sharded(n_shards: int):
     """(main, (offload_0, ..., offload_{n-1})) for the sharded executor:
     one offload device per KV-sequence shard.

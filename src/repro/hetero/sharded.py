@@ -46,7 +46,8 @@ from repro.hetero.transfer import TransferLedger
 class ShardedHeteroExecutor(HeteroExecutor):
     def __init__(self, cfg: ArchConfig, mem: MemoryConfig, sc,
                  sparse_params, *, mode: str = "overlap",
-                 validate: bool = False, n_shards: int = 2, devices=None):
+                 validate: bool = False, n_shards: int = 2, devices=None,
+                 main_mesh=None):
         assert n_shards >= 1, n_shards
         assert sc.max_len % n_shards == 0, (sc.max_len, n_shards)
         self.n_shards = n_shards
@@ -58,7 +59,8 @@ class ShardedHeteroExecutor(HeteroExecutor):
             assert len(offs) == n_shards, (len(offs), n_shards)
         self.off_devs = offs
         super().__init__(cfg, mem, sc, sparse_params, mode=mode,
-                         validate=validate, devices=(main, offs[0]))
+                         validate=validate, devices=(main, offs[0]),
+                         main_mesh=main_mesh)
         local = sc.max_len // n_shards
         assert local % self.sel.page == 0, \
             f"shard window {local} must align to the selection page " \
@@ -126,13 +128,15 @@ class ShardedHeteroExecutor(HeteroExecutor):
 
     def _to_apply(self, handle):
         """Index-only up exchange: ship each shard's (vals, idx) pairs —
-        8 bytes per candidate — and merge on the main device."""
-        ups = [self.ledgers[s].ship_up(handle[s], self.main_dev)
+        8 bytes per candidate — and merge on the apply side (single main
+        device, or replicated over the main mesh so the merged pidx feeds
+        the sequence-parallel apply without a device conflict)."""
+        ups = [self.ledgers[s].ship_up(handle[s], self._apply_target)
                for s in range(self.n_shards)]
         return self._merge(ups, self._pinned_lengths(self._sel_inputs))
 
     def _handle_to_pidx(self, handle, inputs):
-        ups = [jax.device_put(h, self.main_dev) for h in handle]
+        ups = [jax.device_put(h, self._apply_target) for h in handle]
         return self._merge(ups, self._pinned_lengths(inputs))
 
     def _pin_state(self):
@@ -199,6 +203,9 @@ class ShardedHeteroExecutor(HeteroExecutor):
             "offload": [str(x) for x in self.off_devs],
             "distinct": any(x != self.main_dev for x in self.off_devs),
         }
+        if self.main_mesh is not None:
+            d["devices"]["main_mesh"] = [
+                str(x) for x in self.main_mesh.devices.flat]
         d["shards"] = {
             "n_shards": self.n_shards,
             "window_tokens": self.sc.max_len // self.n_shards,

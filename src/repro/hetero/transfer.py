@@ -58,7 +58,13 @@ class TransferLedger:
         return jax.device_put(tree, device)
 
     def ship_up(self, tree, device):
-        self.up_bytes += pytree_bytes(tree)
+        """``device`` may be a single JAX device or a (replicated)
+        NamedSharding when the apply side is a main mesh — replication
+        physically moves ONE COPY PER MESH DEVICE, so the ledger counts
+        every copy (same honesty rule as counting no-op same-device puts:
+        bytes reflect the logical link, per destination)."""
+        copies = getattr(getattr(device, "mesh", None), "size", 1)
+        self.up_bytes += pytree_bytes(tree) * copies
         return jax.device_put(tree, device)
 
     def count_span(self, nbytes: int):

@@ -41,6 +41,16 @@ def make_mesh(shape, axes) -> Mesh:
                          **_auto_kwargs(len(axes)))
 
 
+def mesh_from_devices(devices, axes=("seq",)) -> Mesh:
+    """Mesh over an EXPLICIT 1-D device list (``jax.make_mesh`` always
+    starts from device 0 — the serving engine's main mesh must instead
+    claim specific devices so offload shards can round-robin over the
+    rest)."""
+    import numpy as np
+
+    return Mesh(np.array(devices), tuple(axes), **_auto_kwargs(len(axes)))
+
+
 def use_mesh(mesh: Mesh):
     """Context manager that activates ``mesh`` for jitted computations:
     ``jax.set_mesh`` where it exists, the classic ``with mesh:`` otherwise."""

@@ -14,6 +14,12 @@ lookahead selection on a second device, src/repro/hetero) and prints its
 per-stage overhead breakdown; launch with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` for a real split.
 
+``--main-mesh N`` (with ``--offload``) runs the apply phase itself
+sequence-parallel over an N-device main mesh — LSE-merged
+``distributed_paged_sparse_decode`` behind the engine's ``page_attn`` seam;
+composes with ``--offload-shards M`` for the full M-selection x N-apply
+topology under ``XLA_FLAGS=--xla_force_host_platform_device_count=N+M``.
+
 ``--retrieval on`` enables the document-memory service (src/repro/retrieval):
 per-slot FLARE triggers over the decode logits, retrieved documents (or MaC
 memory embeddings with ``--retrieval-kind mac``) spliced into the paged pool
@@ -51,6 +57,11 @@ def main(argv=None):
                     help="KV-sequence shards on the offload side (one "
                          "device per shard; launch with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N+1)")
+    ap.add_argument("--main-mesh", type=int, default=1,
+                    help="devices in the MAIN apply mesh (sequence-"
+                         "parallel LSE-merged apply; composes with "
+                         "--offload-shards: launch with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N+M)")
     ap.add_argument("--retrieval", default="off",
                     choices=["on", "off", "inline", "sync", "overlap"],
                     help="document-memory service (on = overlap)")
@@ -97,6 +108,8 @@ def main(argv=None):
                              tp=args.tp, page=8, offload=offload,
                              offload_shards=(args.offload_shards
                                              if offload != "off" else 1),
+                             main_mesh=(args.main_mesh
+                                        if offload != "off" else 1),
                              retrieval=retrieval),
                  key=jax.random.PRNGKey(1))
     sch = Scheduler(eng)
@@ -109,8 +122,10 @@ def main(argv=None):
     wall = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in done.values())
     shards = args.offload_shards if offload != "off" else 1
+    mesh_n = args.main_mesh if offload != "off" else 1
     print(f"method={args.method} offload={offload}"
-          f"{f'/shards={shards}' if shards > 1 else ''} "
+          f"{f'/shards={shards}' if shards > 1 else ''}"
+          f"{f'/mesh={mesh_n}' if mesh_n > 1 else ''} "
           f"retrieval={ret_mode or 'off'}: "
           f"{len(done)}/{args.requests} requests, "
           f"{toks} tokens, {toks / wall:.1f} tok/s")

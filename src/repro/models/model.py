@@ -553,9 +553,13 @@ def decode_step_paged_presel(params, cfg: ArchConfig, token, pool, live,
 
     ``page_attn`` overrides the selected-page attention implementation
     (same contract as ``ops.paged_decode_attention``: (q, kc, vc, pids,
-    lengths, page_size=) -> (out, lse)). The sharded-offload stack uses it
-    to run ``distributed.topk.distributed_paged_sparse_decode`` when the
-    main side is itself a mesh (LSE-merged sequence-parallel apply).
+    lengths, page_size=) -> (out, lse)). The main-mesh serving stack uses
+    it to run ``distributed.topk.distributed_paged_sparse_decode`` when the
+    main side is itself a mesh (LSE-merged sequence-parallel apply). With a
+    ``page_attn`` installed, the DENSE fallback branch runs through the
+    SAME seam — every view page selected is dense attention — so both
+    sides of the traced cond are sequence-parallel and the step never
+    collapses to a single device of the mesh.
 
     Returns (logits [B, V], pool', q_layers [L, B, Hp, hd], k_layers
     [L, B, KV, hd]) — the per-layer query/key of THIS step feed the next
@@ -602,7 +606,16 @@ def decode_step_paged_presel(params, cfg: ArchConfig, token, pool, live,
             return repad_dead_heads(out, q, cfg)
 
         def dense(_):
-            return A.attention_decode(q, kc, vc, lb, cfg, tp=tp)
+            if page_attn is None:
+                return A.attention_decode(q, kc, vc, lb, cfg, tp=tp)
+            # distributed dense fallback: all view pages selected through
+            # the same sequence-parallel seam (lb masks the live region)
+            n_pages = kc.shape[1] // ps
+            allp = jnp.broadcast_to(
+                jnp.arange(n_pages, dtype=jnp.int32)[None], (B, n_pages))
+            out, _ = page_attn(strip_dead_heads(q, cfg), kc, vc, allp, lb,
+                               page_size=ps)
+            return repad_dead_heads(out, q, cfg)
 
         attn = jax.lax.cond(use_sparse, sparse, dense, None)
         x = x + _attn_out(lp["attn"], attn, cfg, tp)

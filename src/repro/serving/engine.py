@@ -75,6 +75,16 @@ class ServeConfig:
     # (vals, idx) candidates; the merged selection is bit-identical to
     # offload_shards=1 in both scheduling modes.
     offload_shards: int = 1
+    # >1 builds an N-device MAIN mesh and runs the APPLY phase
+    # sequence-parallel over it: the paged-pool view is sharded over the
+    # sequence axis inside ``decode_step_paged_presel``'s page_attn seam
+    # (distributed_paged_sparse_decode — both cond branches, sparse apply
+    # AND dense fallback), and only (out, lse) pairs cross the mesh.
+    # Composes with offload_shards=M: M selection shards + N apply shards
+    # scale independently (paper Fig. 6a end to end). Requires a hetero
+    # offload mode — the apply phase exists as a separate stage only under
+    # the two-phase select->apply split.
+    main_mesh: int = 1
     # --- retrieval subsystem (src/repro/retrieval) ---
     # A repro.retrieval.RetrievalConfig enables the document-memory service:
     # per-slot FLARE/DRAGIN triggers over the pooled decode logits, dynamic
@@ -102,6 +112,12 @@ class Engine:
         # sharded offload: every shard window must cover a whole number of
         # selection pages AND kv pages, so align max_len to gran * shards
         gran *= max(sc.offload_shards, 1)
+        # main-mesh apply: pow2-bucketed decode views are multiples of the
+        # granule, so folding the mesh size in keeps every bucket length
+        # divisible by n_shards * page_size — the sequence-parallel apply's
+        # shard-granularity contract (distributed_paged_sparse_decode
+        # asserts it; an unaligned bucket used to trip it)
+        gran *= max(sc.main_mesh, 1)
         if sc.max_len % gran:
             sc = dataclasses.replace(
                 sc, max_len=((sc.max_len + gran - 1) // gran) * gran)
@@ -140,6 +156,25 @@ class Engine:
             sparse_fn = fallback_fn
         self._sparse_fn = sparse_fn
 
+        # --- main mesh (sequence-parallel apply) ---------------------------
+        self.main_mesh = None
+        self._mesh_sharding = None       # replicated NamedSharding on it
+        devices = None                   # executor placement override
+        if sc.main_mesh > 1:
+            assert sc.paged, "main_mesh shards the paged apply"
+            assert sc.offload in ("sync", "overlap"), \
+                "main_mesh needs ServeConfig(offload='sync'|'overlap') — " \
+                "the sequence-parallel apply runs the two-phase presel step"
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.hetero import policy as hpolicy
+            from repro.launch.mesh import mesh_from_devices
+            mains, offs = hpolicy.pick_devices_mesh(
+                sc.main_mesh, max(sc.offload_shards, 1))
+            self.main_mesh = mesh_from_devices(mains, ("seq",))
+            self._mesh_sharding = NamedSharding(self.main_mesh,
+                                                PartitionSpec())
+            devices = (mains[0], offs if sc.offload_shards > 1 else offs[0])
+
         self.hetero = None
         if sc.offload != "off":
             assert sc.offload in ("sync", "overlap"), sc.offload
@@ -152,12 +187,14 @@ class Engine:
                 self.hetero = ShardedHeteroExecutor(
                     cfg, self.mem, self.sc, self.sparse_params,
                     mode=sc.offload, validate=sc.offload_validate,
-                    n_shards=sc.offload_shards)
+                    n_shards=sc.offload_shards, devices=devices,
+                    main_mesh=self.main_mesh)
             else:
                 from repro.hetero import HeteroExecutor
                 self.hetero = HeteroExecutor(
                     cfg, self.mem, self.sc, self.sparse_params,
-                    mode=sc.offload, validate=sc.offload_validate)
+                    mode=sc.offload, validate=sc.offload_validate,
+                    devices=devices, main_mesh=self.main_mesh)
         else:
             assert sc.offload_shards <= 1, \
                 "offload_shards needs ServeConfig(offload='sync'|'overlap')"
@@ -243,6 +280,15 @@ class Engine:
                     self.cfg, self.sc.n_slots, self.sc.max_len,
                     page_size=self.sc.kv_page_size,
                     total_pages=self.sc.pool_pages, tp=self.sc.tp)
+                if self._mesh_sharding is not None:
+                    # commit the pool buffers REPLICATED over the main mesh
+                    # from the start: every jit touching them (apply with
+                    # the shard_map seam, prefill splice, chunked extend)
+                    # then compiles for the mesh, and buffer donation stays
+                    # honorable (replicated in == replicated out)
+                    for k in ("k_pages", "v_pages"):
+                        self.pool.device[k] = jax.device_put(
+                            self.pool.device[k], self._mesh_sharding)
                 self._pending = np.zeros((self.sc.n_slots,), np.int32)
         elif self.caches is None:
             assert self.cfg.family in POOL_FAMILIES, \
