@@ -62,6 +62,15 @@ from repro.hetero.transfer import TransferLedger
 from repro.models import model as M
 
 PATCHED = "patched"   # tag of composite pinned-input records
+FUSED = "fused"       # tag of pinned inputs produced by a fused window
+READY = "ready"       # tag of a selection already merged on the apply side
+
+
+def _is_ready(handle) -> bool:
+    """A fused window returns its exit lookahead as a MERGED pidx resident
+    on the apply target — no per-shard ship_up/merge left to do."""
+    return isinstance(handle, tuple) and len(handle) == 2 \
+        and handle[0] == READY
 
 
 class HeteroExecutor:
@@ -102,6 +111,9 @@ class HeteroExecutor:
 
         self._span_jits: Dict[Tuple, callable] = {}
         self._apply_jits: Dict[int, callable] = {}
+        self._fused_jits: Dict[Tuple, callable] = {}
+        self._sp_apply_buf = None      # sparse params on the apply target
+        self._select_full_jit = None   # full-window select (fused replay)
 
     def _init_offload_state(self, sparse_params) -> None:
         """Offload-resident state: method params, index summary, stale
@@ -171,11 +183,14 @@ class HeteroExecutor:
         inputs = (self.summary, self.q_buf, lengths)
         return self._select_jit(self.sp_off, *inputs), inputs
 
-    def _to_apply(self, handle):
+    def _to_apply(self, handle, inputs=None):
         """Ship the consumable selection to the apply side as pidx
         [L, B, n_sel] (the index-only up exchange) — a single main device,
         or replicated over the main mesh when the apply is
-        sequence-parallel."""
+        sequence-parallel. A READY handle (fused-window exit lookahead) is
+        already merged and resident there."""
+        if _is_ready(handle):
+            return handle[1]
         return self.ledger.ship_up(handle, self._apply_target)
 
     def _patch(self, old, fresh, dirty_np: np.ndarray):
@@ -209,14 +224,23 @@ class HeteroExecutor:
     def _raw_lengths(self, inputs):
         return inputs[2]
 
-    def _replay_handle(self, inputs):
-        """Synchronously recompute the selection handle a consumed buffer
-        was produced from (recursing through row patches)."""
+    def _replay_pidx(self, inputs):
+        """Synchronously recompute the FINAL pidx a consumed buffer was
+        produced from, recursing through row patches. Recursion runs at the
+        pidx level (patch-then-merge == merge-then-patch: the candidate
+        merge is per-row) so PATCHED composites can nest FUSED pins — the
+        exit lookahead of a fused window, replayed as one full-window
+        select from the pinned pre-ingest state on the apply target."""
         if isinstance(inputs, tuple) and inputs and inputs[0] == PATCHED:
             _, old, fresh, dirty = inputs
-            return self._patch(self._replay_handle(old),
-                               self._replay_handle(fresh), dirty)
-        return self._select_from_pinned(inputs)
+            return self._patch(self._replay_pidx(old),
+                               self._replay_pidx(fresh), dirty)
+        if isinstance(inputs, tuple) and inputs and inputs[0] == FUSED:
+            _, summary, qbuf, la_len = inputs
+            return self._sel_full_jit()(self._sp_apply(), summary, qbuf,
+                                        la_len)
+        return self._handle_to_pidx(self._select_from_pinned(inputs),
+                                    inputs)
 
     def _select_from_pinned(self, inputs):
         summary, q, lengths = inputs
@@ -228,6 +252,8 @@ class HeteroExecutor:
             return jnp.where(jnp.asarray(dirty),
                              self._pinned_lengths(fresh),
                              self._pinned_lengths(old))
+        if isinstance(inputs, tuple) and inputs and inputs[0] == FUSED:
+            return inputs[3]
         return self._raw_lengths(inputs)
 
     def _handle_to_pidx(self, handle, inputs):
@@ -323,6 +349,51 @@ class HeteroExecutor:
     # decode
     # ------------------------------------------------------------------
 
+    def _resolve_sel(self, lengths_np: np.ndarray, live_np: np.ndarray,
+                     *, sync: bool):
+        """Resolve the selection consumed by the NEXT apply: cold-start
+        when no lookahead is pending, otherwise reuse it, patching the rows
+        of slots whose membership changed. Shared by the stepped schedule
+        and the fused-window entry (bit-identical resolution either way).
+        Returns (pinned_inputs, pidx, select_wall_s)."""
+        t_sel = 0.0
+        if self.sel_buf is None:                          # cold start
+            t0 = time.perf_counter()
+            self.sel_buf, self._sel_inputs = \
+                self._launch_select(lengths_np)
+            self._dirty &= ~live_np
+            self.profiler.lookahead_cold += 1
+            if sync:
+                jax.block_until_ready(self.sel_buf)
+                t_sel += time.perf_counter() - t0
+        else:
+            self.profiler.lookahead_hits += 1
+            patch_rows = self._dirty & live_np
+            if patch_rows.any():
+                # membership changed for these slots only: patch their
+                # rows from a fresh selection, keep the overlapped
+                # lookahead of every clean slot
+                t0 = time.perf_counter()
+                fresh, fresh_inputs = self._launch_select(lengths_np)
+                if _is_ready(self.sel_buf):
+                    # fused exit lookahead is already a merged pidx: patch
+                    # at the pidx level (merge is per-row, so this equals
+                    # patching the handles first)
+                    self.sel_buf = (READY, self._patch(
+                        self.sel_buf[1],
+                        self._to_apply(fresh, fresh_inputs), patch_rows))
+                else:
+                    self.sel_buf = self._patch(self.sel_buf, fresh,
+                                               patch_rows)
+                self._sel_inputs = (PATCHED, self._sel_inputs,
+                                    fresh_inputs, patch_rows.copy())
+                self._dirty &= ~patch_rows
+                self.profiler.lookahead_patched += 1
+                if sync:
+                    jax.block_until_ready(self.sel_buf)
+                    t_sel += time.perf_counter() - t0
+        return self._sel_inputs, self._to_apply(self.sel_buf), t_sel
+
     def decode(self, params, tok, pool_device: Dict, table,
                lengths_np: np.ndarray, live_np: np.ndarray):
         """One pooled decode step. Returns (logits, {k_pages, v_pages})."""
@@ -335,35 +406,8 @@ class HeteroExecutor:
 
         t_sel = 0.0
         if offloaded:
-            if self.sel_buf is None:                      # cold start
-                t0 = time.perf_counter()
-                self.sel_buf, self._sel_inputs = \
-                    self._launch_select(lengths_np)
-                self._dirty &= ~live_np
-                self.profiler.lookahead_cold += 1
-                if sync:
-                    jax.block_until_ready(self.sel_buf)
-                    t_sel += time.perf_counter() - t0
-            else:
-                self.profiler.lookahead_hits += 1
-                patch_rows = self._dirty & live_np
-                if patch_rows.any():
-                    # membership changed for these slots only: patch their
-                    # rows from a fresh selection, keep the overlapped
-                    # lookahead of every clean slot
-                    t0 = time.perf_counter()
-                    fresh, fresh_inputs = self._launch_select(lengths_np)
-                    self.sel_buf = self._patch(self.sel_buf, fresh,
-                                               patch_rows)
-                    self._sel_inputs = (PATCHED, self._sel_inputs,
-                                        fresh_inputs, patch_rows.copy())
-                    self._dirty &= ~patch_rows
-                    self.profiler.lookahead_patched += 1
-                    if sync:
-                        jax.block_until_ready(self.sel_buf)
-                        t_sel += time.perf_counter() - t0
-            pidx_inputs = self._sel_inputs
-            pidx = self._to_apply(self.sel_buf)
+            pidx_inputs, pidx, t_sel = self._resolve_sel(lengths_np,
+                                                         live_np, sync=sync)
         else:
             # dynamic fallback: single-device execution, no offload work
             pidx_inputs, pidx = None, self._neg_sel
@@ -419,6 +463,123 @@ class HeteroExecutor:
         return logits, pool
 
     # ------------------------------------------------------------------
+    # fused multi-step windows (serving.fused)
+    # ------------------------------------------------------------------
+
+    def _sp_apply(self):
+        """Method params on the apply target (the in-scan select/ingest
+        run there for the duration of a fused window)."""
+        if self._sp_apply_buf is None:
+            src = self.sp_off if hasattr(self, "sp_off") else self.sp_offs[0]
+            self._sp_apply_buf = jax.device_put(src, self._apply_target)
+        return self._sp_apply_buf
+
+    def _sel_full_jit(self):
+        """Full-window select (device-agnostic jit) — the in-scan selection
+        and the FUSED-pin validation replay both use it."""
+        if self._select_full_jit is None:
+            self._select_full_jit = jax.jit(self.sel.select)
+        return self._select_full_jit
+
+    def _fused_state_up(self):
+        """Ship the offload-resident index state to the apply target for a
+        fused window (accounted as bulk traffic — a state migration, not
+        the per-step exchange). Returns (summary, q_buf)."""
+        summary = self.ledger.ship_down(self.summary, self._apply_target,
+                                        bulk=True)
+        qbuf = self.ledger.ship_down(self.q_buf, self._apply_target,
+                                     bulk=True)
+        return summary, qbuf
+
+    def _fused_state_down(self, summary, qbuf):
+        """Restore the post-window index state to the offload device(s) so
+        the stepped schedule can resume seamlessly."""
+        self.summary = self.ledger.ship_down(summary, self.off_dev,
+                                             bulk=True)
+        self.q_buf = self.ledger.ship_down(qbuf, self.off_dev, bulk=True)
+
+    def _fused_fn(self, n_pages_view: int, K: int, trigger):
+        key = (n_pages_view, K, trigger)
+        if key not in self._fused_jits:
+            page_attn = None
+            if self.main_mesh is not None:
+                import functools
+
+                from repro.distributed.topk import \
+                    distributed_paged_sparse_decode
+                page_attn = functools.partial(
+                    distributed_paged_sparse_decode, mesh=self.main_mesh,
+                    axis="seq")
+            from repro.serving.fused import make_fused_presel
+            fn = make_fused_presel(self.cfg, self.mem, self.sc, self.sel,
+                                   K=K, trigger=trigger,
+                                   page_attn=page_attn)
+            self._fused_jits[key] = jax.jit(fn, donate_argnums=(3, 4))
+        return self._fused_jits[key]
+
+    def decode_fused(self, params, tok_np, pool_device: Dict, table,
+                     lengths_np: np.ndarray, live_np: np.ndarray, K: int,
+                     *, gen_np, maxnew_np, armed_np, arm_after_np, trigger):
+        """Up to K pooled decode steps in ONE jitted scan: the two-phase
+        apply + the lookahead double-buffer run entirely on the apply
+        target, with early exit (masked iterations) when a slot finishes
+        or a retrieval trigger fires. The window enters from the SAME
+        resolved selection the stepped schedule would consume and exits
+        with the pending lookahead reinstalled (READY pidx + FUSED pins),
+        so stepped and fused schedules interleave bit-identically."""
+        sync = self.mode == "sync"
+        t_step = time.perf_counter()
+        context = int(lengths_np.max()) + 1 if live_np.any() else 1
+        offloaded = hpolicy.dynamic_mode(context, self.mem) == "offload"
+        if offloaded:
+            pidx_inputs, pidx, _ = self._resolve_sel(lengths_np, live_np,
+                                                     sync=sync)
+        else:
+            pidx_inputs, pidx = None, self._neg_sel
+            self.invalidate()
+        summary0, qbuf0 = self._fused_state_up()
+        outs = self._fused_fn(table.shape[1], K, trigger)(
+            params, self._sp_apply(), jnp.asarray(tok_np),
+            pool_device["k_pages"], pool_device["v_pages"], table,
+            jnp.asarray(lengths_np, jnp.int32), jnp.asarray(live_np),
+            jnp.asarray(gen_np, jnp.int32), jnp.asarray(maxnew_np,
+                                                        jnp.int32),
+            pidx, jnp.asarray(bool(offloaded)), summary0, qbuf0,
+            jnp.asarray(armed_np), jnp.asarray(arm_after_np, jnp.int32))
+        if sync:
+            jax.block_until_ready(outs)
+        if self.validate and offloaded and pidx_inputs is not None:
+            # entry selection replayed exactly as in the stepped schedule;
+            # the exit lookahead is validated at its consumption (FUSED
+            # pins), mid-window selections by the fused-vs-stepped oracle
+            self._validate(pidx, pidx_inputs)
+        nsteps = int(jax.block_until_ready(outs["nsteps"]))
+        emits_np = np.asarray(outs["emits"])
+        offl_np = np.asarray(outs["offl"])[:nsteps]
+        for _ in range(nsteps):
+            self._tick()
+        self._fused_state_down(outs["summary"], outs["qbuf"])
+        if offl_np.size and not offl_np.all():
+            # the stepped schedule calls invalidate() on every fallback
+            # step, which clears the dirty rows — replicate that so a
+            # pre-window dirty bit cannot outlive a mid-window fallback
+            self._dirty[:] = False
+        if bool(np.asarray(outs["sel_ok"])):
+            self.sel_buf = (READY, outs["sel"])
+            self._sel_inputs = (FUSED, outs["prev_summary"],
+                                outs["prev_q"], outs["prev_len"])
+        else:
+            self.invalidate()
+        self.profiler.record_fused(
+            nsteps, int((emits_np[:nsteps] >= 0).sum()), context,
+            time.perf_counter() - t_step,
+            offload_steps=int(offl_np.sum()),
+            local_steps=nsteps - int(offl_np.sum()))
+        return {"k_pages": outs["k_pages"], "v_pages": outs["v_pages"],
+                "pending": np.asarray(outs["pending"]), "nsteps": nsteps,
+                "emits": emits_np, "fired": np.asarray(outs["fired"])}
+
+    # ------------------------------------------------------------------
     # validation mode
     # ------------------------------------------------------------------
 
@@ -426,8 +587,7 @@ class HeteroExecutor:
         """Re-run the consumed selection synchronously from its pinned
         inputs: async result must be bit-identical, and every index must be
         a valid stale pick (inside the live region it was computed from)."""
-        handle = self._replay_handle(inputs)
-        ref = jax.block_until_ready(self._handle_to_pidx(handle, inputs))
+        ref = jax.block_until_ready(self._replay_pidx(inputs))
         got = np.asarray(jax.block_until_ready(pidx))
         if not np.array_equal(got, np.asarray(ref)):
             raise AssertionError(

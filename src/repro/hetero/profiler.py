@@ -41,6 +41,10 @@ class HeteroProfiler:
         self.lookahead_hits = 0
         self.lookahead_cold = 0
         self.lookahead_patched = 0
+        # fused multi-step windows (serving.fused): one host dispatch per
+        # window instead of per step
+        self.fused_windows = 0
+        self.fused_steps = 0
 
     def record_step(self, n_live: int, context: int, step_s: float,
                     select_s: Optional[float] = None,
@@ -58,6 +62,22 @@ class HeteroProfiler:
             self.offload_steps += 1
         else:
             self.local_steps += 1
+
+    def record_fused(self, n_steps: int, n_tokens: int, context: int,
+                     step_s: float, *, offload_steps: int,
+                     local_steps: int):
+        """One fused window of ``n_steps`` device steps behind a single
+        host dispatch. Per-step offload/local attribution comes from the
+        scan's emitted per-step fallback log."""
+        self.steps += n_steps
+        self.tokens += n_tokens
+        self.step_s += step_s
+        self.max_context = max(self.max_context,
+                               context + max(n_steps - 1, 0))
+        self.offload_steps += offload_steps
+        self.local_steps += local_steps
+        self.fused_windows += 1
+        self.fused_steps += n_steps
 
     # -- Fig. 3-style decomposition ------------------------------------
 
@@ -103,6 +123,10 @@ class HeteroProfiler:
                           "cold_starts": self.lookahead_cold,
                           "patched": self.lookahead_patched},
             "max_context": self.max_context,
+            "fused": {"windows": self.fused_windows,
+                      "steps": self.fused_steps,
+                      "steps_per_dispatch": self.fused_steps
+                      / max(self.fused_windows, 1)},
             "step_s_total": self.step_s,
             "us_per_step": 1e6 * self.step_s / max(self.steps, 1),
             "tokens_per_s": self.tokens / self.step_s if self.step_s else 0.0,

@@ -38,7 +38,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, MemoryConfig
 from repro.hetero import policy as hpolicy
-from repro.hetero.executor import HeteroExecutor
+from repro.hetero.executor import HeteroExecutor, _is_ready
 from repro.hetero.select import make_offload_select
 from repro.hetero.transfer import TransferLedger
 
@@ -126,14 +126,18 @@ class ShardedHeteroExecutor(HeteroExecutor):
         idx = jnp.concatenate([u[1] for u in ups], axis=-1)
         return self._finalize_jit(vals, idx, lengths)
 
-    def _to_apply(self, handle):
+    def _to_apply(self, handle, inputs=None):
         """Index-only up exchange: ship each shard's (vals, idx) pairs —
         8 bytes per candidate — and merge on the apply side (single main
         device, or replicated over the main mesh so the merged pidx feeds
-        the sequence-parallel apply without a device conflict)."""
+        the sequence-parallel apply without a device conflict). READY
+        handles (fused-window exit lookahead) are already merged there."""
+        if _is_ready(handle):
+            return handle[1]
         ups = [self.ledgers[s].ship_up(handle[s], self._apply_target)
                for s in range(self.n_shards)]
-        return self._merge(ups, self._pinned_lengths(self._sel_inputs))
+        pins = inputs if inputs is not None else self._sel_inputs
+        return self._merge(ups, self._pinned_lengths(pins))
 
     def _handle_to_pidx(self, handle, inputs):
         ups = [jax.device_put(h, self._apply_target) for h in handle]
@@ -155,6 +159,41 @@ class ShardedHeteroExecutor(HeteroExecutor):
     def _tick(self) -> None:
         for led in self.ledgers:
             led.tick()
+
+    # ------------------------------------------------------------------
+    # fused multi-step windows
+    # ------------------------------------------------------------------
+
+    def _fused_state_up(self):
+        """Concatenate the shard summaries along the PAGE axis (axis 2 —
+        windows are contiguous and ascending, so the concat IS the
+        full-window summary: windowed ingest writes only the pages a shard
+        owns) and ship the result to the apply target. The in-scan select
+        over it is bit-identical to the merged per-shard selection
+        (merge_shard_topk's tie-breaking contract). q_bufs are identical
+        across shards (same blend inputs), so shard 0's suffices."""
+        sums = [self.ledgers[s].ship_down(self.summaries[s],
+                                          self._apply_target, bulk=True)
+                for s in range(self.n_shards)]
+        summary = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=2), *sums)
+        qbuf = self.ledgers[0].ship_down(self.q_bufs[0], self._apply_target,
+                                         bulk=True)
+        return summary, qbuf
+
+    def _fused_state_down(self, summary, qbuf):
+        """Scatter the post-window summary back: each shard takes its page
+        window (slice of axis 2); every shard's q_buf takes the full
+        blended buffer."""
+        for s in range(self.n_shards):
+            sh = self.shards[s]
+            lo = sh.tok_lo // sh.page
+            sl = jax.tree_util.tree_map(
+                lambda x, lo=lo, n=sh.n_pages: x[:, :, lo: lo + n], summary)
+            self.summaries[s] = self.ledgers[s].ship_down(
+                sl, self.off_devs[s], bulk=True)
+            self.q_bufs[s] = self.ledgers[s].ship_down(
+                qbuf, self.off_devs[s], bulk=True)
 
     # ------------------------------------------------------------------
     # admission / prefill hooks

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import init_params
-from repro.serving import Engine, ServeConfig, Scheduler
+from repro.serving import Engine, OffloadConfig, ServeConfig, Scheduler
 
 
 def main(argv=None):
@@ -62,6 +62,12 @@ def main(argv=None):
                          "parallel LSE-merged apply; composes with "
                          "--offload-shards: launch with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N+M)")
+    ap.add_argument("--offload-validate", action="store_true",
+                    help="replay every consumed lookahead selection "
+                         "synchronously and bit-check it")
+    ap.add_argument("--fused-steps", type=int, default=1,
+                    help="decode steps fused into one on-device lax.scan "
+                         "per host dispatch (1 = stepped host loop)")
     ap.add_argument("--retrieval", default="off",
                     choices=["on", "off", "inline", "sync", "overlap"],
                     help="document-memory service (on = overlap)")
@@ -102,14 +108,15 @@ def main(argv=None):
                 kind="mac", mode=ret_mode, min_interval=4, max_retrievals=2,
                 mac=MacConfig(segment_len=16, memory_slots=8, retrieve_k=2))
     extra = 96 if retrieval is not None else 16
+    offload_cfg = OffloadConfig(
+        mode=offload, validate=args.offload_validate,
+        shards=args.offload_shards if offload != "off" else 1,
+        main_mesh=args.main_mesh if offload != "off" else 1)
     eng = Engine(cfg, params,
                  ServeConfig(max_len=args.prompt_len + args.max_new + extra,
                              n_slots=args.slots, method=args.method,
-                             tp=args.tp, page=8, offload=offload,
-                             offload_shards=(args.offload_shards
-                                             if offload != "off" else 1),
-                             main_mesh=(args.main_mesh
-                                        if offload != "off" else 1),
+                             tp=args.tp, page=8, offload_cfg=offload_cfg,
+                             fused_steps=args.fused_steps,
                              retrieval=retrieval),
                  key=jax.random.PRNGKey(1))
     sch = Scheduler(eng)
@@ -129,6 +136,10 @@ def main(argv=None):
           f"retrieval={ret_mode or 'off'}: "
           f"{len(done)}/{args.requests} requests, "
           f"{toks} tokens, {toks / wall:.1f} tok/s")
+    if args.fused_steps > 1:
+        hs, ds = eng.stats["host_steps"], eng.stats["decode_steps"]
+        print(f"fused decode: {ds} device steps in {hs} host dispatches "
+              f"({ds / max(hs, 1):.1f} steps/dispatch)")
     if eng.hetero is not None:
         print("hetero per-stage breakdown (Fig. 3 style):")
         print(json.dumps(eng.hetero.report(), indent=2, sort_keys=True))

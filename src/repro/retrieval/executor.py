@@ -43,6 +43,20 @@ from repro.retrieval.service import RetrievalService
 MODES = ("inline", "sync", "overlap")
 
 
+def traced_trigger(kind: str, tau: float, logits, lengths):
+    """FLARE/DRAGIN trigger predicate as a PURE traced function — the
+    per-step evaluation the fused decode loop runs on device. ``lengths``
+    is the pre-step masked length vector (the same array the host
+    ``trigger_slots`` receives), so the DRAGIN context weight matches the
+    stepped path bit for bit."""
+    if kind == "flare":
+        return rag_m.flare_trigger(logits, tau=tau)
+    if kind == "dragin":
+        ent_w = jnp.log1p(jnp.asarray(lengths, jnp.float32))
+        return rag_m.dragin_trigger(logits, ent_w, tau=tau)
+    raise KeyError(f"unknown trigger {kind!r}")
+
+
 @dataclasses.dataclass
 class RetrievalConfig:
     """``ServeConfig(retrieval=...)`` — the document-memory service knobs."""
@@ -186,6 +200,37 @@ class RetrievalExecutor:
                 continue
             out.append(int(i))
         return out
+
+    def fused_gates(self):
+        """Host gates of ``trigger_slots`` compiled into per-slot scalars a
+        fused window can evaluate on device without a host turn.
+
+        ``armed [B] bool`` folds the static gates (enabled, not waiting,
+        retrieval budget); the countdown gates become ``arm_after [B]
+        int32`` — the in-window EMITTED-TOKEN count at which they open,
+        valid because a slot's history grows by exactly one token per
+        emitted token while no splice lands (the engine only enters fused
+        windows with the retrieval subsystem quiescent):
+
+          cooldown   len(hist) - last_len >= min_interval
+                     -> emitted >= min_interval - (len(hist0) - last_len)
+          mac bank   counts[i] > 0 after the next segment push
+                     -> emitted >= segment_len - (len(hist0) - pushed)
+        """
+        r = self.rcfg
+        n = self.sc.n_slots
+        armed = (self._enabled & ~self._waiting
+                 & (self._n_ret < r.max_retrievals))
+        for i in self._inflight:
+            armed[i] = False
+        h0 = np.asarray([len(h) for h in self._hist], np.int64)
+        arm_after = (r.min_interval - (h0 - self._last_len)).astype(np.int32)
+        if self.bank is not None:
+            bank_need = np.where(
+                self.bank.counts > 0, np.int32(-(1 << 30)),
+                (self.mc.segment_len - (h0 - self._pushed)).astype(np.int32))
+            arm_after = np.maximum(arm_after, bank_need)
+        return armed, arm_after
 
     def splice_bound(self) -> int:
         """Upper bound on spliced tokens per retrieval — page reservation

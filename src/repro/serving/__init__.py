@@ -1,3 +1,4 @@
-from repro.serving.engine import Engine, ServeConfig
+from repro.serving.engine import Engine, OffloadConfig, ServeConfig
+from repro.serving.events import StepEvents
 from repro.serving.scheduler import Scheduler, Request
 from repro.serving.kv_cache import SlotManager, PagedKVPool

@@ -36,6 +36,7 @@ from repro.configs.base import ArchConfig, MemoryConfig
 from repro.core import placement
 from repro.core.methods import get_sparse_method
 from repro.models import model as M
+from repro.serving.events import StepEvents
 from repro.serving.kv_cache import PagedKVPool, SlotManager
 
 POOL_FAMILIES = ("dense", "moe", "audio", "vlm")
@@ -43,6 +44,41 @@ POOL_FAMILIES = ("dense", "moe", "audio", "vlm")
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, (n - 1).bit_length())
+
+
+@dataclasses.dataclass
+class OffloadConfig:
+    """Heterogeneous-offload topology as one nested config
+    (``ServeConfig(offload_cfg=OffloadConfig(...))``).
+
+    mode       "off" = inline sparse pipeline; "sync" = two-phase
+               select->apply on the offload device but serialized;
+               "overlap" = double-buffered lookahead selection overlapped
+               with decode (the paper's heterogeneous execution).
+    validate   replay each consumed selection and bit-check it.
+    shards     >1 = one offload device per contiguous KV-sequence shard
+               (hetero.sharded), index-only candidate merge.
+    main_mesh  >1 = N-device main mesh running the apply phase
+               sequence-parallel. Composes with ``shards``.
+    """
+    mode: str = "off"
+    validate: bool = False
+    shards: int = 1
+    main_mesh: int = 1
+
+    def __post_init__(self):
+        if self.mode not in ("off", "sync", "overlap"):
+            raise ValueError(
+                f"offload mode must be 'off', 'sync' or 'overlap', "
+                f"got {self.mode!r}")
+        if self.shards < 1:
+            raise ValueError(f"offload shards must be >= 1, "
+                             f"got {self.shards}")
+        if self.main_mesh < 1:
+            raise ValueError(f"main_mesh must be >= 1, got {self.main_mesh}")
+        if self.mode == "off" and (self.shards > 1 or self.main_mesh > 1):
+            raise ValueError("shards/main_mesh need "
+                             "OffloadConfig(mode='sync'|'overlap')")
 
 
 @dataclasses.dataclass
@@ -93,6 +129,40 @@ class ServeConfig:
     # Composes with ``offload`` — retrieval slots share the pool with
     # sparse-attention slots. Requires paged=True.
     retrieval: Optional[object] = None
+    # --- redesigned stepping/config surface -----------------------------
+    # ``offload_cfg`` is the first-class surface for the offload topology;
+    # the flat ``offload`` / ``offload_validate`` / ``offload_shards`` /
+    # ``main_mesh`` fields above are kept as DEPRECATED aliases. Flat
+    # non-default values win (pre-existing call sites behave unchanged);
+    # otherwise the nested config populates the flat fields. The two
+    # surfaces stay in sync through ``dataclasses.replace`` on either.
+    offload_cfg: Optional[OffloadConfig] = None
+    # decode steps fused into one on-device lax.scan per host dispatch
+    # (serving/fused.py): K>1 trades per-token host round-trips for one
+    # dispatch per window, with masked early exit back to the host when a
+    # slot finishes or a retrieval trigger fires. 1 = stepped host loop.
+    fused_steps: int = 1
+
+    def __post_init__(self):
+        flat = (self.offload, self.offload_validate, self.offload_shards,
+                self.main_mesh)
+        if self.offload_cfg is not None and flat == ("off", False, 1, 1):
+            oc = self.offload_cfg
+            self.offload = oc.mode
+            self.offload_validate = oc.validate
+            self.offload_shards = oc.shards
+            self.main_mesh = oc.main_mesh
+        else:
+            # (re)derive the nested view — also validates the flat fields
+            self.offload_cfg = OffloadConfig(
+                mode=self.offload, validate=self.offload_validate,
+                shards=self.offload_shards, main_mesh=self.main_mesh)
+        if self.fused_steps < 1:
+            raise ValueError(
+                f"fused_steps must be >= 1, got {self.fused_steps}")
+        if self.fused_steps > 1 and not self.paged:
+            raise ValueError("fused_steps > 1 fuses the PAGED decode loop "
+                             "(ServeConfig(paged=True))")
 
 
 class Engine:
@@ -236,13 +306,19 @@ class Engine:
         self._bucket_fns: Dict[Tuple[int, int], callable] = {}
         self._extend_fns: Dict[Tuple[int, bool], callable] = {}
         self._splice_fns: Dict[Tuple[int, int], callable] = {}
+        self._fused_fns: Dict[Tuple, callable] = {}   # inline fused loops
+        self._table_view_cache = None  # (npv, table_version) -> sliced view
 
         self.slots = SlotManager(sc.n_slots, sc.max_len)
         self.pool: Optional[PagedKVPool] = None
         self.caches = None            # legacy dense pool
         # chunked-prefill state: slot -> [request_id, prompt np, next_pos]
         self._chunks: Dict[int, list] = {}
-        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
+        # host_steps counts step_pool dispatch boundaries, decode_steps the
+        # device steps behind them — their ratio is the host-dispatch
+        # amortization a fused window buys (bench_fused_decode)
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
+                      "host_steps": 0, "decode_steps": 0}
 
     # ------------------------------------------------------------------
     # simple batched API
@@ -546,11 +622,20 @@ class Engine:
         return min(g * units, self.sc.max_len)
 
     def _table_view(self, lengths: np.ndarray, extra: int = 1) -> jnp.ndarray:
-        """Page table restricted to the bucketed view length."""
+        """Page table restricted to the bucketed view length.
+
+        The slice is cached on (view pages, pool.table_version): steady-state
+        decode re-slices (and re-uploads) nothing — the cache invalidates
+        only when the bucket changes or a host-side table edit (admission,
+        release, splice) bumps the pool's version counter."""
         needed = int(lengths.max()) + extra if lengths.size else 1
         vl = self._view_len(needed)
         npv = vl // self.sc.kv_page_size
-        return self.pool.device["page_table"][:, :npv]
+        key = (npv, self.pool.table_version)
+        if self._table_view_cache is None or self._table_view_cache[0] != key:
+            self._table_view_cache = (
+                key, self.pool.device["page_table"][:, :npv])
+        return self._table_view_cache[1]
 
     def _decode_live(self) -> np.ndarray:
         """Slots that decode this step: live, not mid-prefill, and not
@@ -562,9 +647,25 @@ class Engine:
             live &= ~self.retrieval.waiting_mask()
         return live
 
-    def step_pool(self) -> List[Tuple[int, int, int]]:
-        """One decode step for every live slot; returns (request_id, slot,
-        token) emissions. Paged path: per-slot lengths (each slot attends,
+    def _fused_window(self) -> int:
+        """Width of the next fused decode window. 1 = stepped host loop.
+        Fused windows only open when the host has nothing to interleave:
+        no chunked prefill pending and the retrieval subsystem quiescent
+        (in-flight queries and waiting slots need per-step host turns)."""
+        K = self.sc.fused_steps
+        if K <= 1 or not self.sc.paged or self._chunks:
+            return 1
+        if self.retrieval is not None and self.retrieval.busy():
+            return 1
+        return K
+
+    def step_pool(self) -> StepEvents:
+        """One host dispatch of the decode loop; returns a ``StepEvents``
+        (iterating it yields the (request_id, slot, token) emissions the
+        old list API returned). Stepped path: one decode step for every
+        live slot. Fused path (``fused_steps`` K > 1): up to K steps run
+        on device in one ``lax.scan`` and the host replays the emitted
+        event log. Paged path: per-slot lengths (each slot attends,
         writes, and rotates at its own position); legacy path: shared
         ``lengths.max()`` watermark."""
         self._ensure_pool()
@@ -574,7 +675,10 @@ class Engine:
         if not live.any():
             if self.retrieval is not None:
                 self._retrieval_idle()
-            return []
+            return StepEvents()
+        K = self._fused_window()
+        if K > 1:
+            return self._step_pool_fused(live, K)
         lengths = np.where(live, self.slots.lengths(), 0).astype(np.int32)
         t0 = time.perf_counter()
         table = self._table_view(lengths)
@@ -591,23 +695,124 @@ class Engine:
         self.pool.device["v_pages"] = pool["v_pages"]
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         self.stats["decode_s"] += time.perf_counter() - t0
-        out = []
+        self.stats["host_steps"] += 1
+        self.stats["decode_steps"] += 1
+        ev = StepEvents(steps=1)
         for i in np.flatnonzero(live):
             rid = self.slots.slots[i].request_id
-            out.append((rid, int(i), int(self._pending[i])))
+            ev.emissions.append((rid, int(i), int(self._pending[i])))
             if self.retrieval is not None:
                 self.retrieval.note_token(int(i), int(self._pending[i]))
             self._pending[i] = nxt[i]
-        self.stats["tokens"] += len(out)
+        self.stats["tokens"] += len(ev.emissions)
         self.slots.step(live)
         for i in np.flatnonzero(live):
             if self.slots.slots[i].done:
+                ev.finished.append(int(i))
                 self.pool.release(int(i))
                 if self.retrieval is not None:
                     self.retrieval.on_release(int(i))
         if self.retrieval is not None:
-            self._retrieval_step(logits, live, lengths)
-        return out
+            ev.fired.extend(self._retrieval_step(logits, live, lengths))
+        return ev
+
+    # -- fused multi-step decode (serving/fused.py) ---------------------
+
+    def _fused_fn_inline(self, n_pages_view: int, K: int, trigger):
+        key = (n_pages_view, K, trigger)
+        if key not in self._fused_fns:
+            from repro.serving.fused import make_fused_paged
+            fn = make_fused_paged(self.cfg, self.mem, self.sc, K=K,
+                                  trigger=trigger,
+                                  sparse_fn=self._sparse_fn)
+            self._fused_fns[key] = jax.jit(fn, donate_argnums=(3, 4))
+        return self._fused_fns[key]
+
+    def _decode_fused_inline(self, table, lengths, live, K, gen, maxnew,
+                             armed, arm_after, trigger):
+        fn = self._fused_fn_inline(int(table.shape[1]), K, trigger)
+        outs = fn(self.params, self.sparse_params,
+                  jnp.asarray(self._pending),
+                  self.pool.device["k_pages"], self.pool.device["v_pages"],
+                  table, jnp.asarray(lengths), jnp.asarray(live),
+                  jnp.asarray(gen), jnp.asarray(maxnew),
+                  jnp.asarray(armed), jnp.asarray(arm_after))
+        nsteps = int(jax.block_until_ready(outs["nsteps"]))
+        return {"k_pages": outs["k_pages"], "v_pages": outs["v_pages"],
+                "pending": outs["pending"], "nsteps": nsteps,
+                "emits": np.asarray(outs["emits"]),
+                "fired": np.asarray(outs["fired"])}
+
+    def _step_pool_fused(self, live: np.ndarray, K: int) -> StepEvents:
+        """Run up to K decode steps in one jitted scan, then replay the
+        emitted per-step event log through the exact bookkeeping the
+        stepped path runs — token-for-token identical emissions, finish
+        order, retrieval launches, and pool accounting. The scan stops
+        early (masked no-ops, ``nsteps`` reports the real count) when any
+        slot finishes or fires a trigger, handing control back to the host
+        for admission/splice servicing at the same step boundary the
+        stepped loop would have."""
+        sl = self.slots.slots
+        lengths = np.where(live, self.slots.lengths(), 0).astype(np.int32)
+        gen = np.asarray([s.generated for s in sl], np.int32)
+        maxnew = np.asarray([s.max_new for s in sl], np.int32)
+        rx = self.retrieval
+        if rx is not None:
+            armed, arm_after = rx.fused_gates()
+            trigger = (rx.rcfg.trigger, rx.rcfg.tau)
+        else:
+            armed = np.zeros((self.sc.n_slots,), bool)
+            arm_after = np.zeros((self.sc.n_slots,), np.int32)
+            trigger = None
+        t0 = time.perf_counter()
+        # extra=K: mid-window lengths grow up to K past the entry maximum,
+        # and a page-table view is numerically neutral but a scatter
+        # outside it would silently drop — the view must cover the window
+        table = self._table_view(lengths, extra=K)
+        if self.hetero is not None:
+            res = self.hetero.decode_fused(
+                self.params, self._pending, self.pool.device, table,
+                lengths, live, K, gen_np=gen, maxnew_np=maxnew,
+                armed_np=armed, arm_after_np=arm_after, trigger=trigger)
+        else:
+            res = self._decode_fused_inline(table, lengths, live, K, gen,
+                                            maxnew, armed, arm_after,
+                                            trigger)
+        self.pool.device["k_pages"] = res["k_pages"]
+        self.pool.device["v_pages"] = res["v_pages"]
+        self._pending = np.asarray(res["pending"], np.int32).copy()
+        nsteps = res["nsteps"]
+        emits, fired = res["emits"], res["fired"]
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["host_steps"] += 1
+        self.stats["decode_steps"] += nsteps
+        ev = StepEvents(steps=nsteps)
+        for j in range(nsteps):
+            step_live = emits[j] >= 0
+            for i in np.flatnonzero(step_live):
+                ev.emissions.append((sl[i].request_id, int(i),
+                                     int(emits[j, i])))
+                if rx is not None:
+                    rx.note_token(int(i), int(emits[j, i]))
+            self.stats["tokens"] += int(step_live.sum())
+            self.slots.step(step_live)
+            for i in np.flatnonzero(step_live):
+                if sl[i].done:
+                    ev.finished.append(int(i))
+                    self.pool.release(int(i))
+                    if rx is not None:
+                        rx.on_release(int(i))
+            if rx is not None:
+                rx.tick()
+                for job in rx.collect_ready(min_age=1):
+                    self._queue_splice(*job)
+                for i in np.flatnonzero(fired[j]):
+                    if not self._reserve_splice(int(i)):
+                        rx.note_suppressed(int(i))
+                        continue
+                    rx.launch(int(i))
+                    ev.fired.append(int(i))
+        return ev
 
     # -- retrieval service hooks (src/repro/retrieval) ------------------
 
@@ -625,21 +830,25 @@ class Engine:
             self._queue_splice(*job)
 
     def _retrieval_step(self, logits, live_np: np.ndarray,
-                        lengths_np: np.ndarray) -> None:
+                        lengths_np: np.ndarray) -> List[int]:
         """Post-decode retrieval phase: consume queries launched on earlier
         steps (the fired slot paused for exactly one step in EVERY mode —
         one dataflow, barriers differ), then evaluate this step's triggers,
-        reserve pages, and launch."""
+        reserve pages, and launch. Returns the slots whose queries
+        launched this step."""
         rx = self.retrieval
         rx.tick()
         for job in rx.collect_ready(min_age=1):
             self._queue_splice(*job)
+        launched: List[int] = []
         for slot in rx.trigger_slots(logits, live_np, lengths_np,
                                      self.slots.slots):
             if not self._reserve_splice(slot):
                 rx.note_suppressed(slot)
                 continue
             rx.launch(slot)
+            launched.append(slot)
+        return launched
 
     def _reserve_splice(self, slot: int) -> bool:
         """Grow the slot's page reservation for the retrieval upper bound
@@ -664,13 +873,13 @@ class Engine:
         self.retrieval.note_splice(
             slot, tokens if tokens is not None else len(embeds))
 
-    def _step_pool_dense(self) -> List[Tuple[int, int, int]]:
+    def _step_pool_dense(self) -> StepEvents:
         """Legacy baseline: dense pool, shared length watermark (max over
         slots) — every slot pays the longest sequence's attention cost and
         the sparse fallback cond sees the watermark, not true lengths."""
         live = self.slots.live_mask()
         if not live.any():
-            return []
+            return StepEvents()
         lengths = self.slots.lengths()
         self.caches = dict(self.caches,
                            length=jnp.asarray(lengths.max(), jnp.int32))
@@ -678,10 +887,15 @@ class Engine:
         logits, self.caches = self._decode(self.params, tok, self.caches,
                                            self.sparse_params)
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
-        out = []
+        self.stats["host_steps"] += 1
+        self.stats["decode_steps"] += 1
+        ev = StepEvents(steps=1)
         for i in np.flatnonzero(live):
             rid = self.slots.slots[i].request_id
-            out.append((rid, int(i), int(self._pending[i])))
+            ev.emissions.append((rid, int(i), int(self._pending[i])))
             self._pending[i] = nxt[i]
         self.slots.step(live)
-        return out
+        for i in np.flatnonzero(live):
+            if self.slots.slots[i].done:
+                ev.finished.append(int(i))
+        return ev

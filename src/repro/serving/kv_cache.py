@@ -100,6 +100,10 @@ class PagedKVPool:
         self.owned: List[List[int]] = [[] for _ in range(n_slots)]
         # LIFO free list; page 0 is never handed out
         self.free: List[int] = list(range(self.total_pages - 1, 0, -1))
+        # monotonically bumped on every host-table push; the engine keys
+        # its sliced table-view cache on it (alloc/grow/release are the
+        # only events that change what a view slice contains)
+        self.table_version = 0
         # freed pages must be scrubbed before reuse so the pool stays zero
         # outside live regions; pad to a fixed count to keep one jit.
         # Donated: release() replaces the device references with the outputs.
@@ -168,6 +172,7 @@ class PagedKVPool:
 
     def _push_table(self) -> None:
         self.device["page_table"] = jnp.asarray(self.table)
+        self.table_version += 1
 
     def shard_owners(self, n_shards: int) -> np.ndarray:
         """Logical page -> owning offload shard, [pages_per_slot].

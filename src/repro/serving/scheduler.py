@@ -95,7 +95,9 @@ class Scheduler:
             prefilled = self.engine.has_prefill_work() and \
                 self.engine.prefill_step()
             emissions = self.engine.step_pool()
-            steps += 1
+            # a fused window consumes several device steps in one dispatch;
+            # idle dispatches still count as one scheduler turn
+            steps += max(1, getattr(emissions, "steps", 1))
             for rid, slot, tok in emissions:
                 req = self.inflight.get(rid)
                 if req is None:
