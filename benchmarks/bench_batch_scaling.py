@@ -50,7 +50,7 @@ def _pooled_serving_rows(cfg, params):
     """Tokens/s of the pooled decode loop: legacy watermark vs paged."""
     import time
 
-    from repro.serving import Engine, ServeConfig
+    from repro.serving import Engine, Request, ServeConfig
 
     rows = []
     rng = np.random.default_rng(0)
@@ -65,10 +65,10 @@ def _pooled_serving_rows(cfg, params):
                                      method="none", tp=4, paged=paged,
                                      kv_page_size=16))
             for i in range(B):
-                assert eng.admit(
+                eng.submit(Request(
                     i, rng.integers(0, cfg.vocab_size, size=prompt_len),
-                    max_new=max_len - prompt_len)
-            eng.step_pool()            # compile + first step outside timing
+                    max_len - prompt_len))
+            eng.poll()   # admit + compile + first step outside timing
             t0 = time.perf_counter()
             n_tok = 0
             for _ in range(steps):

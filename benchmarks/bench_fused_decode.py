@@ -32,7 +32,7 @@ import numpy as np
 
 from benchmarks.common import bench_cfg, pick, record_result, row
 from repro.models import init_params
-from repro.serving import Engine, ServeConfig
+from repro.serving import Engine, OffloadConfig, Request, ServeConfig
 
 REPEATS = 4
 FUSED_KS = (1, 8, 32)
@@ -40,17 +40,18 @@ FUSED_KS = (1, 8, 32)
 
 def _serve(cfg, params, offload, K, *, prompt_len, steps, n_slots):
     sc = ServeConfig(max_len=2048, n_slots=n_slots, method="dsa", tp=4,
-                     page=16, kv_page_size=16, offload=offload,
+                     page=16, kv_page_size=16,
+                     offload_cfg=OffloadConfig(mode=offload),
                      fused_steps=K)
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(1))
     rng = np.random.default_rng(0)
     budget = 2 * K + REPEATS * steps + 64   # stay live through all repeats
-    reqs = [(i, rng.integers(0, cfg.vocab_size, size=prompt_len)
-             .astype(np.int32), budget) for i in range(n_slots)]
-    assert all(eng.admit_many(reqs))
+    for i in range(n_slots):
+        eng.submit(Request(i, rng.integers(
+            0, cfg.vocab_size, size=prompt_len).astype(np.int32), budget))
     done = 0
     while done < 2 * K:                     # compile + pipeline warm-up
-        done += max(1, eng.step_pool().steps)
+        done += max(1, eng.poll().steps)
     eng.stats["host_steps"] = eng.stats["decode_steps"] = 0
     reps = []
     for _ in range(pick(REPEATS, 1)):

@@ -32,7 +32,7 @@ import numpy as np
 from benchmarks.common import bench_cfg, pick, record_result, row
 from repro.hetero import HeteroProfiler
 from repro.models import init_params
-from repro.serving import Engine, ServeConfig
+from repro.serving import Engine, OffloadConfig, Request, ServeConfig
 
 
 REPEATS = 4
@@ -43,14 +43,14 @@ def _serve_steps(cfg, params, method, offload, *, prompt_len, steps,
     total = 2 + REPEATS * steps + 4         # warm-up + repeats, slots live
     sc = ServeConfig(max_len=prompt_len + total + 2 * page, n_slots=n_slots,
                      method=method, tp=4, page=page, kv_page_size=16,
-                     offload=offload)
+                     offload_cfg=OffloadConfig(mode=offload))
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(1))
     rng = np.random.default_rng(0)
-    reqs = [(i, rng.integers(0, cfg.vocab_size, size=prompt_len)
-             .astype(np.int32), total) for i in range(n_slots)]
-    assert all(eng.admit_many(reqs))
+    for i in range(n_slots):
+        eng.submit(Request(i, rng.integers(
+            0, cfg.vocab_size, size=prompt_len).astype(np.int32), total))
     for _ in range(2):                      # compile + pipeline warm-up
-        eng.step_pool()
+        eng.poll()
     if eng.hetero is not None:                        # drop warm-up steps
         eng.hetero.profiler = HeteroProfiler(cfg, eng.mem, offload)
     reps = []

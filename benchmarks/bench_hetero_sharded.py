@@ -32,7 +32,7 @@ import numpy as np
 
 from benchmarks.common import bench_cfg, pick, record_result, row
 from repro.models import init_params
-from repro.serving import Engine, ServeConfig
+from repro.serving import Engine, OffloadConfig, Request, ServeConfig
 
 REPEATS = 3
 
@@ -41,14 +41,15 @@ def _serve_steps(cfg, params, shards, *, prompt_len, steps, n_slots, page):
     total = 2 + REPEATS * steps + 4
     sc = ServeConfig(max_len=prompt_len + total + 2 * page, n_slots=n_slots,
                      method="dsa", tp=4, page=page, kv_page_size=16,
-                     offload="overlap", offload_shards=shards)
+                     offload_cfg=OffloadConfig(mode="overlap",
+                                               shards=shards))
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(1))
     rng = np.random.default_rng(0)
-    reqs = [(i, rng.integers(0, cfg.vocab_size, size=prompt_len)
-             .astype(np.int32), total) for i in range(n_slots)]
-    assert all(eng.admit_many(reqs))
+    for i in range(n_slots):
+        eng.submit(Request(i, rng.integers(
+            0, cfg.vocab_size, size=prompt_len).astype(np.int32), total))
     for _ in range(2):                      # compile + pipeline warm-up
-        eng.step_pool()
+        eng.poll()
     reps = []
     for _ in range(pick(REPEATS, 1)):
         t0 = time.perf_counter()

@@ -32,7 +32,7 @@ from repro.core.methods.mac import MacConfig
 from repro.data import build_corpus
 from repro.models import init_params
 from repro.retrieval import RetrievalConfig
-from repro.serving import Engine, ServeConfig
+from repro.serving import Engine, Request, ServeConfig
 
 
 def _serve(cfg, params, corpus, kind, mode, *, prompt_len, steps, n_slots):
@@ -48,19 +48,15 @@ def _serve(cfg, params, corpus, kind, mode, *, prompt_len, steps, n_slots):
                      retrieval=RetrievalConfig(**kw))
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(1))
     rng = np.random.default_rng(0)
-    reqs = [(i, rng.integers(0, cfg.vocab_size, size=prompt_len)
-             .astype(np.int32), steps) for i in range(n_slots)]
-    assert all(eng.admit_many(reqs))
+    for i in range(n_slots):
+        eng.submit(Request(i, rng.integers(
+            0, cfg.vocab_size, size=prompt_len).astype(np.int32), steps))
     for _ in range(2):                       # compile warm-up
-        if eng.has_prefill_work():
-            eng.prefill_step()
-        eng.step_pool()
+        eng.poll()
     t0 = time.perf_counter()
     emitted, hops = 0, 0
     while emitted < n_slots * steps and hops < 40 * steps:
-        if eng.has_prefill_work():
-            eng.prefill_step()
-        emitted += len(eng.step_pool())
+        emitted += len(eng.poll())
         hops += 1
     wall = time.perf_counter() - t0
     return eng, wall / max(hops, 1), emitted / max(wall, 1e-9)

@@ -1,0 +1,174 @@
+"""Fleet-scale serving under open-loop load: Poisson arrivals -> Router.
+
+The paper frames memory processing as a SERVING cost (22%-97% of request
+latency at fleet scale), so the router is measured the way serving systems
+are: an open-loop arrival process (Poisson inter-arrival gaps, so queueing
+delay is real — requests arrive whether or not the fleet is ready), a
+mixed population (dense / sparse-method pins / retrieval opt-ins, short
+and long prompts, sticky sessions), and tail-latency metrics:
+
+  * TTFT p50 / p99   submit -> first emitted token (queueing + admission
+                     prefill + first decode dispatch)
+  * per-token p50/p99  mean inter-token gap of each finished stream
+  * queue depth      per-replica admission-queue depth over the run
+  * utilization      per-replica mean fraction of slots decoding
+
+Full mode serves a 4-method fleet (none/dsa/seer/lserve, one replica
+each); ``--smoke`` serves none+dsa. Results go to ``record_result
+("router", ...)`` -> BENCH_PR9.json; CI asserts the smoke payload's TTFT
+quantiles are present and non-degenerate.
+"""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_cfg, is_smoke, pick, record_result, row
+from repro.data import build_corpus
+from repro.models import init_params
+from repro.retrieval import RetrievalConfig
+from repro.serving import Request, Router, ServeConfig
+
+
+def _fleet(cfg, params, corpus):
+    methods = pick(("none", "dsa", "seer", "lserve"), ("none", "dsa"))
+    rcfg = RetrievalConfig(kind="rag", mode="sync", corpus=corpus, k=2,
+                           trigger="flare", tau=1.1, min_interval=4,
+                           max_retrievals=2, query_window=6)
+    cfgs = [ServeConfig(max_len=pick(512, 128), n_slots=pick(4, 2),
+                        method=m, tp=4, page=16, kv_page_size=16,
+                        retrieval=rcfg)
+            for m in methods]
+    return Router.build(cfg, params, cfgs,
+                        key=jax.random.PRNGKey(0)), methods
+
+
+def _schedule(cfg, methods, *, n_reqs, rate_hz, max_new, seed=0):
+    """Poisson arrival offsets (seconds) + the mixed request population."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n_reqs))
+    lens = rng.choice(pick((32, 96, 192), (12, 24)), size=n_reqs)
+    out = []
+    for i in range(n_reqs):
+        overrides = None
+        if rng.random() < 0.5:      # half the traffic pins a method
+            overrides = {"method": str(rng.choice(methods))}
+        session = f"s{rng.integers(4)}" if rng.random() < 0.33 else None
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=int(lens[i])).astype(np.int32)
+        out.append((float(arrivals[i]),
+                    Request(i, prompt, max_new,
+                            retrieval=bool(rng.random() < 0.25),
+                            method_overrides=overrides, session=session)))
+    return out
+
+
+def _drive(router, schedule, max_polls=20_000):
+    """Open-loop: submit each request AT its arrival time (sleeping through
+    idle gaps, never early), poll the fleet between arrivals."""
+    handles, i = [], 0
+    t0 = time.perf_counter()
+    while (i < len(schedule) or router.busy()) and max_polls:
+        now = time.perf_counter() - t0
+        while i < len(schedule) and schedule[i][0] <= now:
+            handles.append(router.submit(schedule[i][1]))
+            i += 1
+        if i < len(schedule) and not router.busy():
+            time.sleep(max(0.0, schedule[i][0] - now))
+            continue
+        router.poll()
+        max_polls -= 1
+    router.drain()
+    return handles, time.perf_counter() - t0
+
+
+def _quantiles(xs):
+    xs = np.asarray([x for x in xs if x is not None], np.float64)
+    if not xs.size:
+        return None
+    return {"p50": float(np.quantile(xs, 0.50)),
+            "p99": float(np.quantile(xs, 0.99)),
+            "mean": float(xs.mean()), "n": int(xs.size)}
+
+
+def run():
+    cfg = bench_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
+    corpus = build_corpus(pick(1024, 64), retrieval_vocab=256, doc_max=8,
+                          gen_vocab=cfg.vocab_size, embed_dim=16, seed=0)
+    router, methods = _fleet(cfg, params, corpus)
+    n_reqs = pick(48, 8)
+    max_new = pick(24, 5)
+    rate_hz = pick(12.0, 60.0)    # smoke: a burst, so queueing still shows
+    sched = _schedule(cfg, methods, n_reqs=n_reqs, rate_hz=rate_hz,
+                      max_new=max_new, seed=1)
+
+    # compile warm-up outside the measured run: one tiny request per
+    # replica (pinned), drained before the clock starts
+    warm = [Request(-1 - r.index,
+                    np.arange(8, dtype=np.int32) % cfg.vocab_size, 2,
+                    method_overrides={"method": r.method})
+            for r in router.replicas]
+    for w in warm:
+        router.submit(w)
+    router.drain()
+    for w in warm:
+        for r in router.replicas:
+            r.engine.done.pop(w.rid, None)
+            r.engine._handles.pop(w.rid, None)
+
+    handles, wall = _drive(router, sched)
+    done = {h.rid: h for h in handles if h.done}
+    assert len(done) == n_reqs, f"only {len(done)}/{n_reqs} finished"
+
+    ttft = _quantiles([h.ttft_s() for h in done.values()])
+    ptok = _quantiles([h.per_token_s() for h in done.values()])
+    rep = router.report()
+    n_tok = sum(len(h.tokens) for h in done.values())
+    payload = {
+        "fleet": list(methods),
+        "n_requests": n_reqs,
+        "rate_hz": rate_hz,
+        "max_new": max_new,
+        "wall_s": wall,
+        "tokens_per_s": n_tok / max(wall, 1e-9),
+        "ttft_s": ttft,
+        "per_token_s": ptok,
+        "sessions": rep["sessions"],
+        "replicas": [
+            {"replica": r["replica"], "method": r["method"],
+             "utilization": r["utilization"],
+             "queue_depth": r["queue_depth"], "done": r["done"],
+             "devices": r["devices"]}
+            for r in rep["replicas"]],
+        "shared_corpus": rep.get("shared_corpus"),
+    }
+    record_result("router", f"poisson_{len(methods)}x", payload)
+
+    rows = [
+        row(f"router_{len(methods)}x_ttft_p50", ttft["p50"],
+            f"p99={ttft['p99'] * 1e6:.0f}us n={n_reqs}"),
+        row(f"router_{len(methods)}x_per_token_p50",
+            ptok["p50"] if ptok else 0.0,
+            f"tok_s={payload['tokens_per_s']:.1f}"),
+    ]
+    for r in rep["replicas"]:
+        rows.append(row(
+            f"router_util_r{r['replica']}_{r['method']}", 0.0,
+            f"util={r['utilization']:.2f} "
+            f"qmax={r['queue_depth']['max']}"))
+    if is_smoke():
+        assert ttft and ttft["p50"] > 0 and ttft["p99"] >= ttft["p50"]
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks import common
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    common.set_smoke(args.smoke)
+    print("\n".join(run()))

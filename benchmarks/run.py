@@ -1,7 +1,7 @@
 """Benchmark orchestrator — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows (stdout) and writes the
 structured payloads modules deposit via ``common.record_result`` to
-``--out`` (default ``BENCH_PR6.json``) at the repo root (method, tokens/s,
+``--out`` (default ``BENCH_PR9.json``) at the repo root (method, tokens/s,
 per-stage fractions, ...) AND to the stable ``BENCH.json`` "latest" alias,
 so the perf trajectory is diffable across PRs from one canonical filename
 (the per-PR path used to be hardcoded, which left every later PR's
@@ -26,7 +26,7 @@ from benchmarks import (bench_memory_fraction, bench_kernel_speedup,
                         bench_e2e, bench_energy, bench_batch_scaling,
                         bench_comm_bytes, bench_hetero_overlap,
                         bench_hetero_sharded, bench_retrieval,
-                        bench_main_mesh, bench_fused_decode)
+                        bench_main_mesh, bench_fused_decode, bench_router)
 
 BENCHES = [
     ("memory_fraction (Fig 3/4/5)", bench_memory_fraction),
@@ -40,10 +40,11 @@ BENCHES = [
     ("retrieval (dynamic RAG/MaC service)", bench_retrieval),
     ("main_mesh (Fig 6a seq-parallel apply)", bench_main_mesh),
     ("fused_decode (multi-step scan windows)", bench_fused_decode),
+    ("router (fleet serving, Poisson load)", bench_router),
 ]
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DEFAULT_OUT = os.path.join(ROOT, "BENCH_PR6.json")
+DEFAULT_OUT = os.path.join(ROOT, "BENCH_PR9.json")
 LATEST = os.path.join(ROOT, "BENCH.json")   # stable cross-PR alias
 
 

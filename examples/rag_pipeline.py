@@ -25,7 +25,7 @@ from repro.core.methods import rag
 from repro.data import build_corpus, sample_queries
 from repro.models import init_params
 from repro.retrieval import RetrievalConfig, RetrievalService
-from repro.serving import Engine, ServeConfig, Scheduler
+from repro.serving import Request, Router, ServeConfig
 
 
 def main():
@@ -62,29 +62,34 @@ def main():
     _, cand = svc.query_hybrid(q_terms, q_emb, n_first=16)
     print(f"hybrid first-pass candidates: {np.asarray(cand[:, :4])}...")
 
-    # --- serve time: FLARE triggers splice docs mid-decode ---------------
+    # --- serve time: a 2-replica fleet sharing THIS service; per-slot
+    # FLARE triggers splice docs mid-decode on whichever replica serves ---
     params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
     rcfg = RetrievalConfig(kind="rag", mode=args.mode, corpus=corpus,
                            k=2, trigger="flare", tau=0.9,
-                           min_interval=4, max_retrievals=2)
-    eng = Engine(cfg, params,
-                 ServeConfig(max_len=256, n_slots=args.batch,
-                             method="none", tp=4, retrieval=rcfg),
-                 key=jax.random.PRNGKey(1))
-    sch = Scheduler(eng)
+                           min_interval=4, max_retrievals=2,
+                           service=svc)       # fleet-shared corpus
+    sc = ServeConfig(max_len=256, n_slots=args.batch, method="none",
+                     tp=4, retrieval=rcfg)
+    router = Router.build(cfg, params, sc, n_replicas=2,
+                          key=jax.random.PRNGKey(1))
     rng = np.random.default_rng(0)
-    for _ in range(args.batch):
-        sch.submit(rng.integers(0, cfg.vocab_size, size=24), max_new=16)
     t0 = time.perf_counter()
-    done = sch.run()
-    rep = eng.retrieval.report()
-    toks = sum(len(r.tokens) for r in done.values())
-    print(f"served {len(done)} requests ({toks} tokens) in "
-          f"{time.perf_counter() - t0:.2f}s, mode={args.mode}: "
-          f"{rep['retrievals']} retrievals, "
-          f"{rep['spliced_tokens']} doc tokens spliced, "
-          f"trigger-to-splice {1e3 * rep['trigger_to_splice_s']['mean']:.1f}ms "
-          f"(devices: {rep['devices']})")
+    handles = [router.submit(Request(
+        i, rng.integers(0, cfg.vocab_size, size=24), 16, retrieval=True,
+        session=f"user{i % 2}")) for i in range(args.batch)]
+    done = router.drain()
+    wall = time.perf_counter() - t0
+    toks = sum(len(h.tokens) for h in handles)
+    n_ret = sum(r.engine.retrieval.report()["retrievals"]
+                for r in router.replicas)
+    rep = router.report()
+    print(f"fleet of {rep['n_replicas']} replicas served {len(done)} "
+          f"requests ({toks} tokens) in {wall:.2f}s, mode={args.mode}: "
+          f"{n_ret} retrievals from the shared "
+          f"{rep['shared_corpus']['n_docs']}-doc corpus, "
+          f"mean TTFT {1e3 * rep['ttft_s']['mean']:.1f}ms, placements "
+          f"{[h.replica for h in handles]}")
 
 
 if __name__ == "__main__":

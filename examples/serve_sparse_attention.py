@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import init_params
-from repro.serving import Engine, ServeConfig, Scheduler
+from repro.serving import Engine, OffloadConfig, Request, ServeConfig
 
 
 def main():
@@ -55,21 +55,23 @@ def main():
     eng = Engine(cfg, params,
                  ServeConfig(max_len=args.prompt_len + args.max_new + 16,
                              n_slots=args.slots, method=args.method, tp=4,
-                             page=8, offload=offload),
+                             page=8,
+                             offload_cfg=OffloadConfig(mode=offload)),
                  key=jax.random.PRNGKey(1))
-    sch = Scheduler(eng)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
-    for _ in range(args.requests):
-        sch.submit(rng.integers(0, cfg.vocab_size, size=args.prompt_len),
-                   max_new=args.max_new)
-    done = sch.run()
+    handles = [eng.submit(Request(
+        i, rng.integers(0, cfg.vocab_size, size=args.prompt_len),
+        args.max_new)) for i in range(args.requests)]
+    done = eng.drain()
     wall = time.perf_counter() - t0
-    toks = sum(len(r.tokens) for r in done.values())
-    lat = [r.finished - r.submitted for r in done.values()]
+    toks = sum(len(h.tokens) for h in handles)
+    ttft = [h.ttft_s() for h in handles if h.ttft_s() is not None]
+    lat = [h.finished - h.submitted for h in handles if h.done]
     print(f"method={args.method} offload={offload} "
           f"completed={len(done)}/{args.requests} tokens={toks}")
     print(f"wall={wall:.2f}s throughput={toks / wall:.1f} tok/s "
+          f"p50_ttft={np.median(ttft):.2f}s "
           f"p50_latency={np.median(lat):.2f}s p95={np.quantile(lat, .95):.2f}s")
     print(f"slot utilization={eng.slots.utilization():.2f}")
     if eng.hetero is not None:

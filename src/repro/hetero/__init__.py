@@ -11,8 +11,9 @@ supported.
 """
 from repro.hetero.executor import HeteroExecutor
 from repro.hetero.policy import (OffloadPlan, dynamic_mode, pick_devices,
-                                 pick_devices_sharded, plan_stage_placement,
-                                 resolve_cli_offload, resolve_cli_retrieval)
+                                 pick_devices_replicas, pick_devices_sharded,
+                                 plan_stage_placement, resolve_cli_offload,
+                                 resolve_cli_retrieval)
 from repro.hetero.profiler import HeteroProfiler
 from repro.hetero.sharded import ShardedHeteroExecutor
 from repro.hetero.transfer import TransferLedger
@@ -20,6 +21,7 @@ from repro.hetero.transfer import TransferLedger
 __all__ = [
     "HeteroExecutor", "HeteroProfiler", "OffloadPlan",
     "ShardedHeteroExecutor", "TransferLedger", "dynamic_mode",
-    "pick_devices", "pick_devices_sharded", "plan_stage_placement",
+    "pick_devices", "pick_devices_replicas", "pick_devices_sharded",
+    "plan_stage_placement",
     "resolve_cli_offload", "resolve_cli_retrieval",
 ]

@@ -130,6 +130,31 @@ def pick_devices_mesh(n_main: int, n_shards: int = 1):
     return mains, tuple(pool[i % len(pool)] for i in range(n_shards))
 
 
+def pick_devices_replicas(n_replicas: int):
+    """Partition ``jax.devices()`` into ``n_replicas`` contiguous device
+    GROUPS — one per fleet replica (serving.router). Each group's first
+    device is the replica's main device (its Engine commits the params
+    there); the rest serve that replica's offload/retrieval side, split by
+    the per-engine policies above.
+
+    With ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (or real
+    accelerators), N >= n_replicas gives every replica ``N // n_replicas``
+    devices and true parallel dispatch (JAX's async dispatch overlaps
+    work across distinct devices from one host thread). Fewer devices
+    round-robin — replicas share, transfers degenerate to no-ops, and the
+    fleet stays functional on single-device environments like the other
+    ``pick_devices*`` policies."""
+    import jax
+
+    assert n_replicas >= 1, n_replicas
+    devs = jax.devices()
+    if len(devs) >= n_replicas:
+        per = len(devs) // n_replicas
+        return [tuple(devs[i * per:(i + 1) * per])
+                for i in range(n_replicas)]
+    return [(devs[i % len(devs)],) for i in range(n_replicas)]
+
+
 def pick_devices_sharded(n_shards: int):
     """(main, (offload_0, ..., offload_{n-1})) for the sharded executor:
     one offload device per KV-sequence shard.

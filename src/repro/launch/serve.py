@@ -24,6 +24,10 @@ topology under ``XLA_FLAGS=--xla_force_host_platform_device_count=N+M``.
 per-slot FLARE triggers over the decode logits, retrieved documents (or MaC
 memory embeddings with ``--retrieval-kind mac``) spliced into the paged pool
 overlapped against decode. Composes with ``--offload``.
+
+``--replicas N`` serves the same request stream through a :class:`Router`
+over N engine replicas, each pinned to its own device group, sharing one
+retrieval corpus — the fleet-scale front of the same request-level API.
 """
 from __future__ import annotations
 
@@ -36,7 +40,8 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.models import init_params
-from repro.serving import Engine, OffloadConfig, ServeConfig, Scheduler
+from repro.serving import Engine, OffloadConfig, Request, Router, \
+    ServeConfig
 
 
 def main(argv=None):
@@ -73,6 +78,12 @@ def main(argv=None):
                     help="document-memory service (on = overlap)")
     ap.add_argument("--retrieval-kind", default="rag",
                     choices=["rag", "mac"])
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a Router over N engine replicas, "
+                         "each pinned to its own device group (launch "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=K*N for a real split); rag "
+                         "retrieval shares ONE corpus across the fleet")
     ap.add_argument("--docs", type=int, default=2048,
                     help="synthetic corpus size for --retrieval-kind rag")
     args = ap.parse_args(argv)
@@ -112,40 +123,54 @@ def main(argv=None):
         mode=offload, validate=args.offload_validate,
         shards=args.offload_shards if offload != "off" else 1,
         main_mesh=args.main_mesh if offload != "off" else 1)
-    eng = Engine(cfg, params,
-                 ServeConfig(max_len=args.prompt_len + args.max_new + extra,
-                             n_slots=args.slots, method=args.method,
-                             tp=args.tp, page=8, offload_cfg=offload_cfg,
-                             fused_steps=args.fused_steps,
-                             retrieval=retrieval),
-                 key=jax.random.PRNGKey(1))
-    sch = Scheduler(eng)
+    sc = ServeConfig(max_len=args.prompt_len + args.max_new + extra,
+                     n_slots=args.slots, method=args.method,
+                     tp=args.tp, page=8, offload_cfg=offload_cfg,
+                     fused_steps=args.fused_steps, retrieval=retrieval)
     rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                    size=args.prompt_len), args.max_new)
+            for i in range(args.requests)]
+    if args.replicas > 1:
+        front = Router.build(cfg, params, sc, n_replicas=args.replicas,
+                             key=jax.random.PRNGKey(1))
+        engines = [r.engine for r in front.replicas]
+    else:
+        eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(1))
+        front, engines = eng, [eng]
     t0 = time.perf_counter()
-    for _ in range(args.requests):
-        sch.submit(rng.integers(0, cfg.vocab_size, size=args.prompt_len),
-                   max_new=args.max_new)
-    done = sch.run()
+    handles = [front.submit(r) for r in reqs]
+    done = front.drain()
     wall = time.perf_counter() - t0
-    toks = sum(len(r.tokens) for r in done.values())
+    toks = sum(len(h.tokens) for h in handles)
+    ttft = [h.ttft_s() for h in handles if h.ttft_s() is not None]
     shards = args.offload_shards if offload != "off" else 1
     mesh_n = args.main_mesh if offload != "off" else 1
     print(f"method={args.method} offload={offload}"
           f"{f'/shards={shards}' if shards > 1 else ''}"
           f"{f'/mesh={mesh_n}' if mesh_n > 1 else ''} "
-          f"retrieval={ret_mode or 'off'}: "
+          f"retrieval={ret_mode or 'off'}"
+          f"{f' replicas={args.replicas}' if args.replicas > 1 else ''}: "
           f"{len(done)}/{args.requests} requests, "
-          f"{toks} tokens, {toks / wall:.1f} tok/s")
+          f"{toks} tokens, {toks / wall:.1f} tok/s, "
+          f"p50 TTFT {1e3 * float(np.median(ttft)):.1f}ms")
+    if args.replicas > 1:
+        print("router report:")
+        print(json.dumps(front.report(), indent=2, sort_keys=True))
     if args.fused_steps > 1:
-        hs, ds = eng.stats["host_steps"], eng.stats["decode_steps"]
+        hs = sum(e.stats["host_steps"] for e in engines)
+        ds = sum(e.stats["decode_steps"] for e in engines)
         print(f"fused decode: {ds} device steps in {hs} host dispatches "
               f"({ds / max(hs, 1):.1f} steps/dispatch)")
-    if eng.hetero is not None:
-        print("hetero per-stage breakdown (Fig. 3 style):")
-        print(json.dumps(eng.hetero.report(), indent=2, sort_keys=True))
-    if eng.retrieval is not None:
-        print("retrieval service report:")
-        print(json.dumps(eng.retrieval.report(), indent=2, sort_keys=True))
+    for i, e in enumerate(engines):
+        tag = f" (replica {i})" if len(engines) > 1 else ""
+        if e.hetero is not None:
+            print(f"hetero per-stage breakdown{tag} (Fig. 3 style):")
+            print(json.dumps(e.hetero.report(), indent=2, sort_keys=True))
+        if e.retrieval is not None:
+            print(f"retrieval service report{tag}:")
+            print(json.dumps(e.retrieval.report(), indent=2,
+                             sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -74,6 +74,12 @@ class RetrievalConfig:
     min_interval: int = 8        # context growth required between triggers
     max_retrievals: int = 2      # per request
     validate: bool = False       # replay every consumed query synchronously
+    # a pre-built RetrievalService SHARED across executors (the fleet
+    # router's one-corpus-many-replicas topology: the service is
+    # capacity-padded and incremental-ingest, so documents ingested
+    # through any replica are visible to every replica's triggers).
+    # kind='rag' only; None = the executor builds its own service.
+    service: Optional[RetrievalService] = None
 
 
 class RetrievalExecutor:
@@ -89,10 +95,20 @@ class RetrievalExecutor:
         self.service: Optional[RetrievalService] = None
         self.bank: Optional[MacBankService] = None
         if rcfg.kind == "rag":
-            assert rcfg.corpus is not None, "kind='rag' needs a corpus"
-            self.service = RetrievalService(
-                rcfg.corpus, k=rcfg.k, device=dev, capacity=rcfg.capacity,
-                ingest_block=rcfg.ingest_block, ledger=self.ledger)
+            if rcfg.service is not None:
+                # fleet-shared corpus: adopt the pre-built service (and its
+                # ledger, so cross-replica transfer stats pool in one place)
+                self.service = rcfg.service
+                if self.service.ledger is not None:
+                    self.ledger = self.service.ledger
+                if self.service.device is not None:
+                    self.off_dev = self.service.device
+            else:
+                assert rcfg.corpus is not None, "kind='rag' needs a corpus"
+                self.service = RetrievalService(
+                    rcfg.corpus, k=rcfg.k, device=dev,
+                    capacity=rcfg.capacity, ingest_block=rcfg.ingest_block,
+                    ledger=self.ledger)
         else:
             mc = rcfg.mac or MacConfig()
             # summaries push at page boundaries: segment = page multiple

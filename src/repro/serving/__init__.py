@@ -1,4 +1,38 @@
+"""Serving stack: paged continuous batching behind a request-level API.
+
+The curated surface — examples, benchmarks and the README import from
+``repro.serving``, not deep module paths:
+
+  Engine / ServeConfig / OffloadConfig   the pooled decode engine and its
+                                         config (offload topology nested)
+  Request / ResponseHandle               the ONE admission path
+                                         (``Engine.submit``) and its live
+                                         result view
+  Router / EngineReplica                 fleet serving: a stateless router
+                                         over device-pinned replicas
+  Scheduler                              single-engine compatibility shim
+                                         (positional prompts -> Requests)
+  StepEvents                             typed result of one serving turn
+  SlotManager / PagedKVPool              slot + paged-KV bookkeeping
+"""
+from repro.serving.api import Request, ResponseHandle
 from repro.serving.engine import Engine, OffloadConfig, ServeConfig
 from repro.serving.events import StepEvents
-from repro.serving.scheduler import Scheduler, Request
-from repro.serving.kv_cache import SlotManager, PagedKVPool
+from repro.serving.kv_cache import PagedKVPool, SlotManager
+from repro.serving.replica import EngineReplica
+from repro.serving.router import Router
+from repro.serving.scheduler import Scheduler
+
+__all__ = [
+    "Engine",
+    "EngineReplica",
+    "OffloadConfig",
+    "PagedKVPool",
+    "Request",
+    "ResponseHandle",
+    "Router",
+    "Scheduler",
+    "ServeConfig",
+    "SlotManager",
+    "StepEvents",
+]

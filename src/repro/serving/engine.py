@@ -16,16 +16,19 @@
 * the legacy dense ``n_slots x max_len`` pool with the shared
   ``lengths.max()`` watermark is kept behind ``ServeConfig(paged=False)`` as
   the benchmark baseline (bench_batch_scaling old-vs-new comparison),
-* ``ServeConfig(offload=...)`` routes the memory-processing stages through
+* ``ServeConfig(offload_cfg=OffloadConfig(...))`` routes the
+  memory-processing stages through
   the heterogeneous offload executor (src/repro/hetero): lookahead
   selection on a second device, overlapped with decode, exchanging only
   page indices — the paper's §5 system emulated on JAX devices.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -36,6 +39,7 @@ from repro.configs.base import ArchConfig, MemoryConfig
 from repro.core import placement
 from repro.core.methods import get_sparse_method
 from repro.models import model as M
+from repro.serving.api import Request, ResponseHandle
 from repro.serving.events import StepEvents
 from repro.serving.kv_cache import PagedKVPool, SlotManager
 
@@ -132,10 +136,12 @@ class ServeConfig:
     # --- redesigned stepping/config surface -----------------------------
     # ``offload_cfg`` is the first-class surface for the offload topology;
     # the flat ``offload`` / ``offload_validate`` / ``offload_shards`` /
-    # ``main_mesh`` fields above are kept as DEPRECATED aliases. Flat
-    # non-default values win (pre-existing call sites behave unchanged);
-    # otherwise the nested config populates the flat fields. The two
-    # surfaces stay in sync through ``dataclasses.replace`` on either.
+    # ``main_mesh`` fields above are kept as DEPRECATED aliases that now
+    # emit a ``DeprecationWarning`` when set explicitly. Flat non-default
+    # values win (pre-existing call sites behave unchanged); otherwise the
+    # nested config populates the flat fields. The two surfaces stay in
+    # sync through ``dataclasses.replace`` on either (a coherent
+    # flat == nested replace does not warn).
     offload_cfg: Optional[OffloadConfig] = None
     # decode steps fused into one on-device lax.scan per host dispatch
     # (serving/fused.py): K>1 trades per-token host round-trips for one
@@ -143,16 +149,30 @@ class ServeConfig:
     # slot finishes or a retrieval trigger fires. 1 = stepped host loop.
     fused_steps: int = 1
 
+    _FLAT_OFFLOAD_DEFAULT = ("off", False, 1, 1)
+
     def __post_init__(self):
         flat = (self.offload, self.offload_validate, self.offload_shards,
                 self.main_mesh)
-        if self.offload_cfg is not None and flat == ("off", False, 1, 1):
+        if self.offload_cfg is not None and flat == self._FLAT_OFFLOAD_DEFAULT:
             oc = self.offload_cfg
             self.offload = oc.mode
             self.offload_validate = oc.validate
             self.offload_shards = oc.shards
             self.main_mesh = oc.main_mesh
         else:
+            nested = None if self.offload_cfg is None else (
+                self.offload_cfg.mode, self.offload_cfg.validate,
+                self.offload_cfg.shards, self.offload_cfg.main_mesh)
+            if flat != self._FLAT_OFFLOAD_DEFAULT and nested != flat:
+                # an explicitly-set flat kwarg (not the mirror of a
+                # coherent nested config carried through replace())
+                warnings.warn(
+                    "flat ServeConfig offload kwargs (offload=, "
+                    "offload_validate=, offload_shards=, main_mesh=) are "
+                    "deprecated; use ServeConfig(offload_cfg="
+                    "OffloadConfig(mode=..., validate=..., shards=..., "
+                    "main_mesh=...))", DeprecationWarning, stacklevel=3)
             # (re)derive the nested view — also validates the flat fields
             self.offload_cfg = OffloadConfig(
                 mode=self.offload, validate=self.offload_validate,
@@ -167,8 +187,18 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, sc: ServeConfig,
-                 key=None, mem: Optional[MemoryConfig] = None):
+                 key=None, mem: Optional[MemoryConfig] = None,
+                 devices=None):
         self.cfg = cfg
+        # ``devices``: pin this engine to a device GROUP (a fleet replica's
+        # slice of the machine, hetero.policy.pick_devices_replicas).
+        # Committing the params to the group's first device pins every jit
+        # dispatch there; the remaining devices serve the offload/retrieval
+        # side. None = the process-default device (single-engine behavior,
+        # unchanged).
+        self.devices = tuple(devices) if devices else None
+        if self.devices is not None:
+            params = jax.device_put(params, self.devices[0])
         self.params = params
         self.mem = mem or cfg.memory.replace(method=sc.method)
         # the paged pipeline needs the cache length page-aligned; the paged
@@ -229,8 +259,12 @@ class Engine:
         # --- main mesh (sequence-parallel apply) ---------------------------
         self.main_mesh = None
         self._mesh_sharding = None       # replicated NamedSharding on it
-        devices = None                   # executor placement override
+        exec_devs = None                 # executor placement override
         if sc.main_mesh > 1:
+            assert self.devices is None, \
+                "Engine(devices=...) pins a replica's device group; it " \
+                "does not compose with main_mesh — the mesh picks its own " \
+                "devices (hetero.policy.pick_devices_mesh)"
             assert sc.paged, "main_mesh shards the paged apply"
             assert sc.offload in ("sync", "overlap"), \
                 "main_mesh needs ServeConfig(offload='sync'|'overlap') — " \
@@ -243,7 +277,19 @@ class Engine:
             self.main_mesh = mesh_from_devices(mains, ("seq",))
             self._mesh_sharding = NamedSharding(self.main_mesh,
                                                 PartitionSpec())
-            devices = (mains[0], offs if sc.offload_shards > 1 else offs[0])
+            exec_devs = (mains[0],
+                         offs if sc.offload_shards > 1 else offs[0])
+        elif self.devices is not None:
+            # replica group: main device first, offload side round-robin
+            # over the rest (over the whole group when it has one device —
+            # transfers degenerate to no-ops, as in pick_devices)
+            off_pool = self.devices[1:] or self.devices
+            if sc.offload_shards > 1:
+                exec_devs = (self.devices[0],
+                             tuple(off_pool[i % len(off_pool)]
+                                   for i in range(sc.offload_shards)))
+            else:
+                exec_devs = (self.devices[0], off_pool[0])
 
         self.hetero = None
         if sc.offload != "off":
@@ -257,14 +303,14 @@ class Engine:
                 self.hetero = ShardedHeteroExecutor(
                     cfg, self.mem, self.sc, self.sparse_params,
                     mode=sc.offload, validate=sc.offload_validate,
-                    n_shards=sc.offload_shards, devices=devices,
+                    n_shards=sc.offload_shards, devices=exec_devs,
                     main_mesh=self.main_mesh)
             else:
                 from repro.hetero import HeteroExecutor
                 self.hetero = HeteroExecutor(
                     cfg, self.mem, self.sc, self.sparse_params,
                     mode=sc.offload, validate=sc.offload_validate,
-                    devices=devices, main_mesh=self.main_mesh)
+                    devices=exec_devs, main_mesh=self.main_mesh)
         else:
             assert sc.offload_shards <= 1, \
                 "offload_shards needs ServeConfig(offload='sync'|'overlap')"
@@ -274,9 +320,14 @@ class Engine:
             assert sc.paged, "the retrieval subsystem serves the paged pool"
             assert cfg.family in POOL_FAMILIES
             from repro.retrieval import RetrievalExecutor
+            rdevs = self.hetero.devices if self.hetero else None
+            if rdevs is None and exec_devs is not None:
+                rdevs = (exec_devs[0],
+                         exec_devs[1][0] if isinstance(exec_devs[1], tuple)
+                         else exec_devs[1])
             self.retrieval = RetrievalExecutor(
-                cfg, self.sc, sc.retrieval, params, key=key,
-                devices=self.hetero.devices if self.hetero else None)
+                cfg, self.sc, sc.retrieval, self.params, key=key,
+                devices=rdevs)
 
         self._prefill = jax.jit(
             lambda p, toks: M.prefill(p, cfg, toks, max_len=sc.max_len,
@@ -320,12 +371,183 @@ class Engine:
         self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0,
                       "host_steps": 0, "decode_steps": 0}
 
+        # --- request-level admission state (api.Request is the ONE way
+        # into the pool; the compatibility Scheduler and the fleet router
+        # both go through submit/poll) ---------------------------------
+        self.prefill_token_budget = 2048   # per-poll admission budget
+        self.queue: collections.deque = collections.deque()
+        self._handles: Dict[int, ResponseHandle] = {}
+        self._inflight_h: Dict[int, ResponseHandle] = {}
+        self.done: Dict[int, ResponseHandle] = {}
+        self._auto_rid = 0                 # generate() uses negative rids
+        self._polled_prefill = False
+
+    # ------------------------------------------------------------------
+    # request-level serving API (submit / poll / drain)
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> ResponseHandle:
+        """Enqueue one :class:`Request`. Admission happens inside ``poll``
+        (FCFS under the prefill token budget, chunked for long prompts);
+        the returned handle carries the live token stream and timing."""
+        if not isinstance(req, Request):
+            raise TypeError(
+                f"submit() takes a serving.Request, got {type(req)!r}")
+        if req.rid in self._handles and not self._handles[req.rid].done:
+            raise ValueError(f"request id {req.rid} already in flight")
+        h = ResponseHandle(req)
+        self._handles[req.rid] = h
+        self.queue.append(req)
+        return h
+
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def busy(self) -> bool:
+        return bool(self.queue or self._inflight_h)
+
+    def _next_rid(self) -> int:
+        """Fresh internal rid (negative: never collides with caller ids)."""
+        self._auto_rid -= 1
+        return self._auto_rid
+
+    def _mark_admitted(self, req: Request) -> None:
+        h = self._handles[req.rid]
+        h.admitted = time.perf_counter()
+        self._inflight_h[req.rid] = h
+
+    def _admit_from_queue(self) -> None:
+        """FCFS batch admission within the per-poll prefill token budget:
+        queued short prompts admit TOGETHER (one bucketed prefill per
+        distinct bucket length), long prompts switch to chunked mode
+        (pages reserved now, the prompt streams in ``prefill_chunk`` spans
+        interleaved with decode), rejections re-queue at the FRONT."""
+        if not self.queue:
+            return
+        budget = self.prefill_token_budget
+        batch: List[Request] = []
+        while self.queue and budget > 0:
+            req = self.queue[0]
+            plen = len(req)
+            chunked = self.sc.paged and bool(
+                req.override("chunked", plen > self.sc.chunk_threshold))
+            if chunked:
+                if not self._admit_chunked(req.rid, req.tokens, req.max_new,
+                                           retrieval=req.retrieval):
+                    break
+                self.queue.popleft()
+                self._mark_admitted(req)
+                continue
+            if batch and plen > budget:
+                break                      # defer the rest to the next poll
+            batch.append(req)
+            self.queue.popleft()
+            budget -= plen
+        if not batch:
+            return
+        oks = self._admit_many(
+            [(r.rid, r.tokens, r.max_new) for r in batch],
+            retrieval=[r.retrieval for r in batch])
+        # re-queue rejections at the FRONT, preserving FCFS order
+        for r, ok in zip(reversed(batch), reversed(oks)):
+            if ok:
+                self._mark_admitted(r)
+            else:
+                self.queue.appendleft(r)
+
+    def _dispatch(self, ev: StepEvents) -> None:
+        """Route emissions into their ResponseHandles; finish handles that
+        reached ``max_new`` and stamp the timing marks."""
+        now = time.perf_counter()
+        for rid, _slot, tok in ev.emissions:
+            h = self._inflight_h.get(rid)
+            if h is None:
+                continue
+            if h.first_token_t is None:
+                h.first_token_t = now
+            h.tokens.append(int(tok))
+            if len(h.tokens) >= h.request.max_new:
+                h.finished = now
+                self.done[rid] = h
+                del self._inflight_h[rid]
+
+    def poll(self) -> StepEvents:
+        """One serving turn: admit from the queue (budgeted), advance any
+        chunked prefill, run one pooled-decode dispatch, and route the
+        emissions into their handles. The fleet router and ``drain`` both
+        pump this; it is safe to call on an idle engine."""
+        self._ensure_pool()
+        self._admit_from_queue()
+        self._polled_prefill = bool(self.has_prefill_work()
+                                    and self.prefill_step())
+        ev = self.step_pool()
+        self._dispatch(ev)
+        return ev
+
+    def drain(self, max_steps: int = 10_000) -> Dict[int, ResponseHandle]:
+        """Pump ``poll`` until queue and pool are empty (or the head
+        request can never admit); returns completed handles by rid."""
+        steps = 0
+        while (self.queue or self._inflight_h) and steps < max_steps:
+            ev = self.poll()
+            # a fused window consumes several device steps in one
+            # dispatch; idle dispatches still count as one turn
+            steps += max(1, ev.steps)
+            if not ev and not self._polled_prefill:
+                if self.has_retrieval_work() or self.has_prefill_work():
+                    continue   # retrieval in flight, or a splice chunk
+                               # was queued DURING this step's decode
+                if not self.queue:
+                    break
+                if not self._inflight_h:
+                    break      # head request can never admit: stuck
+        return dict(self.done)
+
+    def throughput_tokens_per_s(self) -> float:
+        if not self.done:
+            return 0.0
+        toks = sum(len(h.tokens) for h in self.done.values())
+        t0 = min(h.submitted for h in self.done.values())
+        t1 = max(h.finished for h in self.done.values())
+        return toks / max(t1 - t0, 1e-9)
+
     # ------------------------------------------------------------------
     # simple batched API
     # ------------------------------------------------------------------
 
     def generate(self, prompts: jnp.ndarray, max_new: int) -> np.ndarray:
-        """prompts [B, S] -> generated [B, max_new] (greedy)."""
+        """prompts [B, S] -> generated [B, max_new] (greedy).
+
+        Thin wrapper over ``submit``+``drain``: each row becomes a
+        :class:`Request` through the one admission path and the pooled
+        continuous-batching loop serves them — the per-row streams are
+        bit-identical to the legacy per-batch dense-cache loop (the
+        pooled-vs-dense equality the paged tests pin). Engines the pool
+        cannot serve (ssm caches, ``paged=False``, prompts that don't
+        fit, a pool already mid-flight) fall back to that loop unchanged.
+        """
+        prompts_np = np.asarray(prompts)
+        B, S = prompts_np.shape
+        poolable = (self.sc.paged and self.cfg.family in POOL_FAMILIES
+                    and S + max_new <= self.sc.max_len
+                    and not self.busy()
+                    and not self.slots.live_mask().any())
+        if not poolable:
+            return self._generate_batched(prompts, max_new)
+        handles = [self.submit(Request(self._next_rid(), row, max_new,
+                                       retrieval=False))
+                   for row in prompts_np]
+        self.drain()
+        for h in handles:        # generate() is a query, not a resident
+            self.done.pop(h.rid, None)       # request: leave no residue
+            self._handles.pop(h.rid, None)
+        assert all(h.done for h in handles), \
+            [h.rid for h in handles if not h.done]
+        return np.stack([np.asarray(h.tokens, np.int32) for h in handles])
+
+    def _generate_batched(self, prompts: jnp.ndarray,
+                          max_new: int) -> np.ndarray:
+        """Legacy batched dense-cache loop (the pre-pool oracle)."""
         t0 = time.perf_counter()
         logits, caches = jax.block_until_ready(
             self._prefill(self.params, prompts))
@@ -408,15 +630,16 @@ class Engine:
             self._splice_fns[key] = jax.jit(splice, donate_argnums=(0, 1))
         return self._splice_fns[key]
 
-    def admit_many(self, requests: List[Tuple[int, np.ndarray, int]],
-                   retrieval: Optional[List] = None) -> List[bool]:
+    def _admit_many(self, requests: List[Tuple[int, np.ndarray, int]],
+                    retrieval: Optional[List] = None) -> List[bool]:
         """Admit a batch of (request_id, prompt, max_new): one bucketed
         prefill per distinct bucket length instead of one per request.
         ``retrieval[i]`` opts request i in/out of the retrieval service
-        (None = service default: on when configured)."""
+        (None = service default: on when configured). Internal — callers
+        admit through ``submit``."""
         self._ensure_pool()
         if not self.sc.paged:
-            return [self.admit(rid, p, mn) for rid, p, mn in requests]
+            return [self._admit_one(rid, p, mn) for rid, p, mn in requests]
         admitted: Dict[int, List] = {}   # bucket_len -> [(slot, prompt)]
         ok: List[bool] = []
         for i, (rid, prompt, max_new) in enumerate(requests):
@@ -473,12 +696,12 @@ class Engine:
         for i, (slot, _) in enumerate(group):
             self._pending[slot] = nxt[i]
 
-    def admit(self, request_id: int, prompt: np.ndarray, max_new: int,
-              retrieval: Optional[bool] = None) -> bool:
+    def _admit_one(self, request_id: int, prompt: np.ndarray, max_new: int,
+                   retrieval: Optional[bool] = None) -> bool:
         """Prefill one request into a free slot (insertion into the pool)."""
         if self.sc.paged:
-            return self.admit_many([(request_id, np.asarray(prompt),
-                                     max_new)], retrieval=[retrieval])[0]
+            return self._admit_many([(request_id, np.asarray(prompt),
+                                      max_new)], retrieval=[retrieval])[0]
         assert self.cfg.family in POOL_FAMILIES, \
             "continuous batching requires dense KV caches"
         self._ensure_pool()
@@ -497,8 +720,9 @@ class Engine:
 
     # -- chunked prefill (long prompts, interleaved with decode) --------
 
-    def admit_chunked(self, request_id: int, prompt: np.ndarray,
-                      max_new: int, retrieval: Optional[bool] = None) -> bool:
+    def _admit_chunked(self, request_id: int, prompt: np.ndarray,
+                       max_new: int,
+                       retrieval: Optional[bool] = None) -> bool:
         """Allocate slot + pages now; the prompt itself is prefilled in
         ``prefill_chunk``-sized spans by ``prefill_step`` so long prompts
         don't stall the decode pool."""

@@ -1,0 +1,190 @@
+"""Stateless async router over a fleet of Engine replicas.
+
+The paper's end-to-end claim (memory processing is 22%-97% of *serving*)
+is a fleet-scale claim: N engines behind a router, mixed arrival traffic,
+p50/p99 TTFT — not one engine stepped by a test harness. The router is
+the request-level front of that fleet:
+
+  * it owns ``EngineReplica`` workers, each an Engine pinned to a distinct
+    device group (``hetero.policy.pick_devices_replicas``) so JAX's async
+    dispatch overlaps their device work from one host thread;
+  * it routes each :class:`Request` by ELIGIBILITY (a ``method_overrides
+    ["method"]`` pin, retrieval opt-in), SESSION AFFINITY (every request
+    of one session stays on one replica — KV/retrieval locality), then
+    LEAST LOAD with a deterministic index tie-break;
+  * it shares ONE ``RetrievalService`` corpus across all replicas (the
+    service is capacity-padded and incremental-ingest, so a document
+    ingested through any replica is visible to every replica's triggers);
+  * the router itself holds no decode state — all serving state lives in
+    the replicas' engines, the router only forwards and pumps.
+
+``submit(Request) -> ResponseHandle`` and ``drain()`` mirror the
+single-engine API, so the single-engine compatibility shim and the fleet
+front are the same surface at different scales.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.serving.api import Request, ResponseHandle
+from repro.serving.engine import ServeConfig
+from repro.serving.events import StepEvents
+from repro.serving.replica import EngineReplica
+
+
+class Router:
+    def __init__(self, replicas: Sequence[EngineReplica], *,
+                 service=None):
+        assert replicas, "a router needs at least one replica"
+        self.replicas = list(replicas)
+        self.service = service          # shared RetrievalService (or None)
+        self._affinity: Dict = {}       # session -> replica index
+        self._handles: Dict[int, ResponseHandle] = {}
+
+    # ------------------------------------------------------------------
+    # fleet construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def build(cls, cfg, params,
+              sc: Union[ServeConfig, Sequence[ServeConfig]],
+              n_replicas: Optional[int] = None, *,
+              key=None, mem=None) -> "Router":
+        """Build a fleet: one ServeConfig replicated ``n_replicas`` times,
+        or a per-replica config list (heterogeneous methods). Device
+        groups come from ``pick_devices_replicas``; every replica with a
+        rag retrieval config is rewired onto ONE shared service."""
+        from repro.hetero import policy as hpolicy
+
+        if isinstance(sc, ServeConfig):
+            assert n_replicas is not None and n_replicas >= 1
+            cfgs = [sc] * n_replicas
+        else:
+            cfgs = list(sc)
+            assert n_replicas is None or n_replicas == len(cfgs)
+        groups = hpolicy.pick_devices_replicas(len(cfgs))
+        service = cls._build_shared_service(cfgs, groups)
+        replicas = []
+        for i, rsc in enumerate(cfgs):
+            if service is not None and rsc.retrieval is not None \
+                    and getattr(rsc.retrieval, "kind", None) == "rag":
+                rsc = dataclasses.replace(
+                    rsc, retrieval=dataclasses.replace(
+                        rsc.retrieval, service=service))
+            replicas.append(EngineReplica(i, cfg, params, rsc, key=key,
+                                          mem=mem, devices=groups[i]))
+        return cls(replicas, service=service)
+
+    @staticmethod
+    def _build_shared_service(cfgs, groups):
+        """One capacity-padded corpus service for the whole fleet, placed
+        on the last device of the last group (an offload-side device on
+        multi-device topologies; device 0 — transfer no-ops — otherwise)."""
+        rcfgs = [c.retrieval for c in cfgs
+                 if c.retrieval is not None
+                 and getattr(c.retrieval, "kind", None) == "rag"]
+        if not rcfgs:
+            return None
+        from repro.retrieval.service import RetrievalService
+        r = rcfgs[0]
+        if r.service is not None:       # caller already built one
+            return r.service
+        assert r.corpus is not None, "kind='rag' needs a corpus"
+        return RetrievalService(r.corpus, k=r.k, device=groups[-1][-1],
+                                capacity=r.capacity,
+                                ingest_block=r.ingest_block)
+
+    # ------------------------------------------------------------------
+    # request-level API (mirrors Engine.submit/poll/drain)
+    # ------------------------------------------------------------------
+
+    def _route(self, req: Request) -> EngineReplica:
+        if req.session is not None and req.session in self._affinity:
+            return self.replicas[self._affinity[req.session]]
+        cands = [r for r in self.replicas if r.can_serve(req)]
+        if not cands:
+            cands = self.replicas      # no eligible replica: best effort
+        best = min(cands, key=lambda r: (r.load(), r.index))
+        if req.session is not None:
+            self._affinity[req.session] = best.index
+        return best
+
+    def submit(self, req: Request) -> ResponseHandle:
+        """Route by affinity/eligibility/load and enqueue on the replica;
+        the handle's ``replica`` field records the placement."""
+        if req.rid in self._handles and not self._handles[req.rid].done:
+            raise ValueError(f"request id {req.rid} already in flight")
+        h = self._route(req).submit(req)
+        self._handles[req.rid] = h
+        return h
+
+    def poll(self) -> StepEvents:
+        """One fleet turn: pump every replica once (their device work
+        overlaps under JAX async dispatch) and merge the events. The
+        merged ``finished``/``fired`` slot ids are replica-local and kept
+        only for counting; emissions carry globally-unique rids."""
+        ev = StepEvents()
+        for r in self.replicas:
+            rev = r.poll()
+            ev.emissions.extend(rev.emissions)
+            ev.finished.extend(rev.finished)
+            ev.fired.extend(rev.fired)
+            ev.steps += rev.steps
+        return ev
+
+    def drain(self, max_steps: int = 100_000) -> Dict[int, ResponseHandle]:
+        """Pump until every replica's queue and pool are empty (or stuck);
+        returns all completed handles by rid."""
+        steps = 0
+        while steps < max_steps:
+            busy = [r for r in self.replicas if r.busy()]
+            if not busy:
+                break
+            alive = False
+            for r in busy:
+                rev = r.poll()
+                steps += max(1, rev.steps)
+                if r.made_progress(rev):
+                    alive = True
+                elif r.engine.queue and r.engine._inflight_h:
+                    alive = True       # admission deferred; retry next turn
+            if not alive:
+                break                  # every busy replica is stuck
+        return self.done()
+
+    def done(self) -> Dict[int, ResponseHandle]:
+        out: Dict[int, ResponseHandle] = {}
+        for r in self.replicas:
+            out.update(r.engine.done)
+        return out
+
+    def busy(self) -> bool:
+        return any(r.busy() for r in self.replicas)
+
+    def ingest(self, corpus) -> None:
+        """Append documents to the fleet-shared corpus (visible to every
+        replica's triggers from the next retrieval on)."""
+        assert self.service is not None, "no shared retrieval service"
+        self.service.ingest(corpus)
+
+    # ------------------------------------------------------------------
+
+    def report(self) -> Dict:
+        done = self.done()
+        ttfts = [h.ttft_s() for h in done.values()
+                 if h.ttft_s() is not None]
+        out = {
+            "n_replicas": len(self.replicas),
+            "requests_done": len(done),
+            "sessions": len(self._affinity),
+            "replicas": [r.report() for r in self.replicas],
+        }
+        if ttfts:
+            out["ttft_s"] = {"mean": float(sum(ttfts) / len(ttfts)),
+                             "max": float(max(ttfts))}
+        if self.service is not None:
+            out["shared_corpus"] = {"n_docs": int(self.service.n_docs),
+                                    "capacity": int(self.service.capacity),
+                                    "device": str(self.service.device)}
+        return out

@@ -1,128 +1,57 @@
-"""Continuous-batching request scheduler (FCFS with admission control).
+"""Single-engine compatibility shim over the request-level serving API.
 
-The engine's jitted decode step has a static batch (= slot count); the
-scheduler's job is to keep those slots full: admit queued requests into free
-slots, step the pooled decode, collect completions, and report utilization —
-the serving-side counterpart of the paper's batch-scaling study (Table 4).
-
-Admission no longer serializes under load: queued short prompts are admitted
-TOGETHER (the engine buckets them by length and runs one pre-jitted prefill
-per bucket), long prompts are admitted in chunked mode — their pages are
-reserved up front and the prompt streams in ``prefill_chunk``-sized spans
-interleaved with decode steps, bounded per step by ``prefill_token_budget``
-so decode latency stays flat while prefill drains.
+The continuous-batching logic this module used to own — FCFS admission
+under a prefill token budget, chunked admission for long prompts, the
+drain loop with its starvation brake — now lives INSIDE the engine behind
+``Engine.submit(Request) -> ResponseHandle`` / ``poll()`` / ``drain()``
+(serving/api.py), where the fleet router shares it. ``Scheduler`` remains
+as the thin positional-prompt front the launchers and older tests grew up
+with: it mints sequential rids, wraps prompts into :class:`Request`, and
+proxies queue/inflight/done straight from the engine.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import numpy as np
 
+from repro.serving.api import Request, ResponseHandle
 from repro.serving.engine import Engine
-
-
-@dataclasses.dataclass
-class Request:
-    request_id: int
-    prompt: np.ndarray
-    max_new: int
-    submitted: float = dataclasses.field(default_factory=time.perf_counter)
-    tokens: List[int] = dataclasses.field(default_factory=list)
-    finished: Optional[float] = None
-    # retrieval-service opt-in/out (None = engine default when configured)
-    retrieval: Optional[bool] = None
 
 
 class Scheduler:
     def __init__(self, engine: Engine, prefill_token_budget: int = 2048):
         self.engine = engine
-        self.prefill_token_budget = prefill_token_budget
-        self.queue: collections.deque = collections.deque()
-        self.inflight: Dict[int, Request] = {}
-        self.done: Dict[int, Request] = {}
+        engine.prefill_token_budget = prefill_token_budget
         self._next_id = 0
+
+    @property
+    def prefill_token_budget(self) -> int:
+        return self.engine.prefill_token_budget
+
+    @property
+    def queue(self):
+        return self.engine.queue
+
+    @property
+    def inflight(self) -> Dict[int, ResponseHandle]:
+        return self.engine._inflight_h
+
+    @property
+    def done(self) -> Dict[int, ResponseHandle]:
+        return self.engine.done
 
     def submit(self, prompt: np.ndarray, max_new: int,
                retrieval: Optional[bool] = None) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append(Request(rid, np.asarray(prompt), max_new,
-                                  retrieval=retrieval))
+        self.engine.submit(Request(rid, np.asarray(prompt), max_new,
+                                   retrieval=retrieval))
         return rid
 
-    def _admit(self):
-        """FCFS batch admission within the per-step prefill token budget."""
-        budget = self.prefill_token_budget
-        batch: List[Request] = []
-        chunked = self.engine.sc.paged
-        while self.queue and budget > 0:
-            req = self.queue[0]
-            plen = len(req.prompt)
-            if chunked and plen > self.engine.sc.chunk_threshold:
-                # long prompt: reserve pages now, stream the prompt later
-                if not self.engine.admit_chunked(req.request_id, req.prompt,
-                                                 req.max_new,
-                                                 retrieval=req.retrieval):
-                    break
-                self.queue.popleft()
-                self.inflight[req.request_id] = req
-                continue
-            if batch and plen > budget:
-                break                      # defer the rest to the next step
-            batch.append(req)
-            self.queue.popleft()
-            budget -= plen
-        if not batch:
-            return
-        oks = self.engine.admit_many(
-            [(r.request_id, r.prompt, r.max_new) for r in batch],
-            retrieval=[r.retrieval for r in batch])
-        # re-queue rejections at the FRONT, preserving FCFS order
-        for r, ok in zip(reversed(batch), reversed(oks)):
-            if ok:
-                self.inflight[r.request_id] = r
-            else:
-                self.queue.appendleft(r)
-
-    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
-        """Drain the queue; returns completed requests."""
-        steps = 0
-        while (self.queue or self.inflight) and steps < max_steps:
-            self._admit()
-            prefilled = self.engine.has_prefill_work() and \
-                self.engine.prefill_step()
-            emissions = self.engine.step_pool()
-            # a fused window consumes several device steps in one dispatch;
-            # idle dispatches still count as one scheduler turn
-            steps += max(1, getattr(emissions, "steps", 1))
-            for rid, slot, tok in emissions:
-                req = self.inflight.get(rid)
-                if req is None:
-                    continue
-                req.tokens.append(tok)
-                if len(req.tokens) >= req.max_new:
-                    req.finished = time.perf_counter()
-                    self.done[rid] = req
-                    del self.inflight[rid]
-            if not emissions and not prefilled:
-                if self.engine.has_retrieval_work() or \
-                        self.engine.has_prefill_work():
-                    continue       # retrieval in flight, or a splice chunk
-                                   # was queued DURING this step's decode
-                if not self.queue:
-                    break
-                if not self.inflight:
-                    break          # head request can never admit: stuck
-
-        return self.done
+    def run(self, max_steps: int = 10_000) -> Dict[int, ResponseHandle]:
+        """Drain the queue; returns completed requests by rid."""
+        return self.engine.drain(max_steps)
 
     def throughput_tokens_per_s(self) -> float:
-        toks = sum(len(r.tokens) for r in self.done.values())
-        if not self.done:
-            return 0.0
-        t0 = min(r.submitted for r in self.done.values())
-        t1 = max(r.finished for r in self.done.values())
-        return toks / max(t1 - t0, 1e-9)
+        return self.engine.throughput_tokens_per_s()

@@ -24,6 +24,7 @@ topology.
 """
 import dataclasses
 import functools
+import warnings
 
 import numpy as np
 import jax
@@ -34,7 +35,8 @@ from hypothesis import strategies as st
 from repro.configs import get_arch
 from repro.data import build_corpus
 from repro.retrieval import RetrievalConfig
-from repro.serving import Engine, OffloadConfig, ServeConfig, StepEvents
+from repro.serving import Engine, OffloadConfig, Request, ServeConfig, \
+    StepEvents
 
 
 @functools.lru_cache(maxsize=1)
@@ -59,13 +61,11 @@ BASE = dict(max_len=128, n_slots=2, tp=4, page=8, kv_page_size=16)
 def _run(cfg, params, sc, prompts, max_new, max_dispatches=200):
     """Drive the engine to drain; returns (streams, fired, window_steps)."""
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
-    assert all(eng.admit_many(
-        [(i, p, mn) for i, (p, mn) in enumerate(zip(prompts, max_new))]))
+    for i, (p, mn) in enumerate(zip(prompts, max_new)):
+        eng.submit(Request(i, p, mn))
     streams, fired, windows = {}, [], []
     for _ in range(max_dispatches):
-        if eng.has_prefill_work():
-            eng.prefill_step()
-        ev = eng.step_pool()
+        ev = eng.poll()
         for rid, _slot, tok in ev:
             streams.setdefault(rid, []).append(tok)
         fired.extend(ev.fired)
@@ -93,10 +93,11 @@ MATRIX = [
     ("dsa", dict()),
     ("seer", dict()),
     ("lserve", dict()),
-    ("dsa", dict(offload="sync", offload_validate=True)),
-    ("dsa", dict(offload="overlap")),
-    ("seer", dict(offload="overlap", offload_validate=True)),
-    ("lserve", dict(offload="sync")),
+    ("dsa", dict(offload_cfg=OffloadConfig(mode="sync", validate=True))),
+    ("dsa", dict(offload_cfg=OffloadConfig(mode="overlap"))),
+    ("seer", dict(offload_cfg=OffloadConfig(mode="overlap",
+                                            validate=True))),
+    ("lserve", dict(offload_cfg=OffloadConfig(mode="sync"))),
 ]
 
 
@@ -194,11 +195,13 @@ def test_trigger_composed_with_offload(setup):
     prompts = _prompts(cfg, (16, 9), seed=4)
     ref, rf, _, _ = _run(
         cfg, params,
-        ServeConfig(method="dsa", retrieval=rcfg, offload="overlap", **BASE),
+        ServeConfig(method="dsa", retrieval=rcfg,
+                    offload_cfg=OffloadConfig(mode="overlap"), **BASE),
         prompts, (10, 10))
     got, gf, _, _ = _run(
         cfg, params,
-        ServeConfig(method="dsa", retrieval=rcfg, offload="overlap",
+        ServeConfig(method="dsa", retrieval=rcfg,
+                    offload_cfg=OffloadConfig(mode="overlap"),
                     fused_steps=4, **BASE),
         prompts, (10, 10))
     assert got == ref and gf == rf and gf
@@ -226,7 +229,7 @@ def test_offload_config_validation():
         OffloadConfig(mode="off", shards=2)
     with pytest.raises(ValueError):
         OffloadConfig(mode="off", main_mesh=2)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError), pytest.warns(DeprecationWarning):
         ServeConfig(offload="nope")
     with pytest.raises(ValueError):
         ServeConfig(fused_steps=0)
@@ -235,20 +238,35 @@ def test_offload_config_validation():
 
 
 def test_offload_config_precedence_and_replace():
-    # nested populates the deprecated flat aliases
-    sc = ServeConfig(offload_cfg=OffloadConfig(mode="overlap", shards=2))
+    # nested populates the flat mirror, silently — the supported surface
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        sc = ServeConfig(offload_cfg=OffloadConfig(mode="overlap",
+                                                   shards=2))
     assert (sc.offload, sc.offload_shards) == ("overlap", 2)
-    # flat aliases still win when set (pre-existing call sites unchanged)
-    sc = ServeConfig(offload="sync",
-                     offload_cfg=OffloadConfig(mode="overlap"))
+    # flat kwargs are DEPRECATED: they warn, and still win over a
+    # conflicting nested config (pre-existing call sites unchanged)
+    with pytest.warns(DeprecationWarning, match="offload_cfg"):
+        sc = ServeConfig(offload="sync",
+                         offload_cfg=OffloadConfig(mode="overlap"))
     assert sc.offload == "sync" and sc.offload_cfg.mode == "sync"
-    # replace on the FLAT surface re-derives the nested view
-    sc = dataclasses.replace(ServeConfig(), offload="overlap")
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        sc = ServeConfig(offload="overlap", offload_shards=2)
+    assert sc.offload_cfg == OffloadConfig(mode="overlap", shards=2)
+    # replace on the FLAT surface re-derives the nested view (and warns)
+    with pytest.warns(DeprecationWarning):
+        sc = dataclasses.replace(ServeConfig(), offload="overlap")
     assert sc.offload_cfg.mode == "overlap"
-    # replace on the NESTED surface updates the flat aliases
-    sc = dataclasses.replace(ServeConfig(),
-                             offload_cfg=OffloadConfig(mode="sync"))
-    assert sc.offload == "sync"
+    # replace on the NESTED surface updates the flat mirror silently, and
+    # an unrelated replace() carries the coherent pair without warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        sc = dataclasses.replace(ServeConfig(),
+                                 offload_cfg=OffloadConfig(mode="sync"))
+        assert sc.offload == "sync"
+        sc2 = dataclasses.replace(sc, fused_steps=2)
+    assert sc2.offload_cfg.mode == "sync" and sc2.offload == "sync"
+    assert sc2.fused_steps == 2
 
 
 def test_table_view_cache(setup):
@@ -258,7 +276,9 @@ def test_table_view_cache(setup):
     sc = ServeConfig(method="none", **BASE)
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
     prompts = _prompts(cfg, (16, 9), seed=6)
-    assert all(eng.admit_many([(0, prompts[0], 4), (1, prompts[1], 4)]))
+    eng.submit(Request(0, prompts[0], 4))
+    eng.submit(Request(1, prompts[1], 4))
+    eng.poll()                             # admit both (one decode step)
     lengths = np.where(eng._decode_live(), eng.slots.lengths(),
                        0).astype(np.int32)
     v1 = eng._table_view(lengths)

@@ -21,7 +21,8 @@ from repro.configs import get_arch
 from repro.core.methods import offload_stages
 from repro.hetero import dynamic_mode, pick_devices, plan_stage_placement
 from repro.models import init_params
-from repro.serving import Engine, ServeConfig, Scheduler
+from repro.serving import Engine, OffloadConfig, Request, ServeConfig, \
+    Scheduler
 
 
 @pytest.fixture(scope="module")
@@ -34,9 +35,7 @@ def setup():
 def _drain(eng, n_steps):
     got = {}
     for _ in range(n_steps):
-        if eng.has_prefill_work():
-            eng.prefill_step()
-        for rid, _slot, tok in eng.step_pool():
+        for rid, _slot, tok in eng.poll():
             got.setdefault(rid, []).append(tok)
     return got
 
@@ -60,11 +59,12 @@ def test_overlap_bitmatches_sync(setup, method):
     streams = {}
     for mode in ("sync", "overlap"):
         sc = ServeConfig(max_len=64, n_slots=2, method=method, tp=4, page=8,
-                         kv_page_size=16, offload=mode,
-                         offload_validate=(mode == "overlap"))
+                         kv_page_size=16,
+                         offload_cfg=OffloadConfig(
+                             mode=mode, validate=(mode == "overlap")))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
-        oks = eng.admit_many([(i, p, 5) for i, p in enumerate(prompts)])
-        assert all(oks)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, 5))
         streams[mode] = _drain(eng, 6)
         assert eng.pool.pages_in_use() == 0
         assert _free_pages_zero(eng.pool)   # zero-page invariant survives
@@ -85,7 +85,8 @@ def test_overlap_bitmatches_sync_under_scheduler(setup):
     for mode in ("sync", "overlap"):
         sc = ServeConfig(max_len=128, n_slots=2, method="dsa", tp=4, page=8,
                          kv_page_size=16, prefill_chunk=16,
-                         chunk_threshold=32, offload=mode)
+                         chunk_threshold=32,
+                         offload_cfg=OffloadConfig(mode=mode))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
         sch = Scheduler(eng, prefill_token_budget=32)
         rids = [sch.submit(p, max_new=4) for p in prompts]
@@ -107,9 +108,10 @@ def test_seer_threshold_selection_offloads(setup):
     streams = {}
     for mode in ("sync", "overlap"):
         sc = ServeConfig(max_len=64, n_slots=2, method="seer", tp=4,
-                         kv_page_size=16, offload=mode)
+                         kv_page_size=16,
+                         offload_cfg=OffloadConfig(mode=mode))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0), mem=mem)
-        assert eng.admit(0, prompt, 5)
+        eng.submit(Request(0, prompt, 5))
         streams[mode] = _drain(eng, 6)
     np.testing.assert_array_equal(streams["sync"][0], streams["overlap"][0])
 
@@ -120,17 +122,19 @@ def test_stale_lookahead_validity(setup):
     only hold indices inside the live region it was computed from."""
     cfg, params = setup
     sc = ServeConfig(max_len=96, n_slots=2, method="dsa", tp=4, page=8,
-                     kv_page_size=16, offload="overlap",
-                     offload_validate=True)
+                     kv_page_size=16,
+                     offload_cfg=OffloadConfig(mode="overlap",
+                                               validate=True))
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
     rng = np.random.default_rng(3)
-    assert eng.admit(0, rng.integers(0, cfg.vocab_size, size=24), 6)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size, size=24), 6))
     got = {}
     for step in range(8):
-        for rid, _s, tok in eng.step_pool():
+        for rid, _s, tok in eng.poll():
             got.setdefault(rid, []).append(tok)
         if step == 2:   # staggered admission forces a lookahead restart
-            assert eng.admit(1, rng.integers(0, cfg.vocab_size, size=12), 4)
+            eng.submit(Request(
+                1, rng.integers(0, cfg.vocab_size, size=12), 4))
         hx = eng.hetero
         if hx.sel_buf is not None:
             _, _, lengths = hx._sel_inputs
@@ -181,10 +185,11 @@ def test_dynamic_fallback_serves_below_min_context(setup):
     streams = {}
     for mode in ("sync", "overlap"):
         sc = ServeConfig(max_len=64, n_slots=2, method="dsa", tp=4, page=8,
-                         kv_page_size=16, offload=mode)
+                         kv_page_size=16,
+                         offload_cfg=OffloadConfig(mode=mode))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0), mem=mem)
         rng = np.random.default_rng(9)
-        assert eng.admit(0, rng.integers(0, cfg.vocab_size, size=16), 4)
+        eng.submit(Request(0, rng.integers(0, cfg.vocab_size, size=16), 4))
         streams[mode] = _drain(eng, 5)
         assert eng.hetero.profiler.local_steps > 0
         assert eng.hetero.profiler.offload_steps == 0

@@ -44,7 +44,8 @@ from repro.kernels import ops, ref
 from repro.launch.mesh import make_mesh
 from repro.models import init_params, model as M
 from repro.retrieval import RetrievalConfig
-from repro.serving import Engine, ServeConfig, Scheduler
+from repro.serving import Engine, OffloadConfig, Request, ServeConfig, \
+    Scheduler
 
 NEG_INF = -1e30
 
@@ -61,9 +62,7 @@ def setup():
 def _drain(eng, n_steps):
     got = {}
     for _ in range(n_steps):
-        if eng.has_prefill_work():
-            eng.prefill_step()
-        for rid, _slot, tok in eng.step_pool():
+        for rid, _slot, tok in eng.poll():
             got.setdefault(rid, []).append(tok)
     return got
 
@@ -102,14 +101,14 @@ def test_sharded_bitmatches_single_and_inline(setup, method):
                                ("sync", "sync", 2),
                                ("overlap", "overlap", 2)):
         sc = ServeConfig(max_len=128, n_slots=2, method=method, tp=4,
-                         page=8, kv_page_size=16, offload=off,
-                         offload_shards=shards,
-                         offload_validate=(off == "overlap"),
+                         page=8, kv_page_size=16,
+                         offload_cfg=OffloadConfig(
+                             mode=off, shards=shards,
+                             validate=(off == "overlap")),
                          retrieval=_rcfg(corpus, rmode))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
-        assert all(eng.admit_many([(i, p, 6) for i, p in
-                                   enumerate(prompts)],
-                                  retrieval=[True, False]))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, 6, retrieval=(i == 0)))
         key = (off, rmode, shards)
         streams[key] = _drain(eng, 24)
         events[key] = [(e["slot"], tuple(e["ids"])) for e in
@@ -149,8 +148,9 @@ def test_sharded_under_scheduler(setup):
     for off, shards in (("sync", 1), ("overlap", 2)):
         sc = ServeConfig(max_len=128, n_slots=2, method="dsa", tp=4, page=8,
                          kv_page_size=16, prefill_chunk=16,
-                         chunk_threshold=32, offload=off,
-                         offload_shards=shards)
+                         chunk_threshold=32,
+                         offload_cfg=OffloadConfig(mode=off,
+                                                   shards=shards))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
         sch = Scheduler(eng, prefill_token_budget=32)
         rids = [sch.submit(p, max_new=4) for p in prompts]
@@ -168,7 +168,8 @@ def test_shard_ownership_alignment(setup):
     whole number of selection and KV pages."""
     cfg, params, _ = setup
     sc = ServeConfig(max_len=100, n_slots=2, method="dsa", tp=4, page=8,
-                     kv_page_size=16, offload="sync", offload_shards=2)
+                     kv_page_size=16,
+                     offload_cfg=OffloadConfig(mode="sync", shards=2))
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
     assert eng.sc.max_len % (2 * 16) == 0 and eng.sc.max_len >= 100
     eng._ensure_pool()
@@ -196,21 +197,21 @@ def test_lookahead_survives_membership_events(setup):
     cfg, params, corpus = setup
     rng = np.random.default_rng(3)
     sc = ServeConfig(max_len=128, n_slots=2, method="dsa", tp=4, page=8,
-                     kv_page_size=16, offload="overlap",
-                     offload_validate=True,
+                     kv_page_size=16,
+                     offload_cfg=OffloadConfig(mode="overlap",
+                                               validate=True),
                      retrieval=_rcfg(corpus, "overlap"))
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
-    assert eng.admit(0, rng.integers(0, cfg.vocab_size, size=16), 8,
-                     retrieval=True)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size, size=16), 8,
+                       retrieval=True))
     got = {}
     for step in range(26):
-        if eng.has_prefill_work():
-            eng.prefill_step()
-        for rid, _s, tok in eng.step_pool():
+        for rid, _s, tok in eng.poll():
             got.setdefault(rid, []).append(tok)
         if step == 2:    # staggered admission: membership change mid-decode
-            assert eng.admit(1, rng.integers(0, cfg.vocab_size, size=12), 6,
-                             retrieval=False)
+            eng.submit(Request(
+                1, rng.integers(0, cfg.vocab_size, size=12), 6,
+                retrieval=False))
     assert len(got[0]) == 8 and len(got[1]) == 6
     assert eng.retrieval.events, "no splice landed — regression unexercised"
     p = eng.hetero.profiler

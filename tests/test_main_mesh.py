@@ -41,7 +41,8 @@ from repro.kernels import ops
 from repro.launch.mesh import make_mesh
 from repro.models import init_params
 from repro.retrieval import RetrievalConfig
-from repro.serving import Engine, ServeConfig, Scheduler
+from repro.serving import Engine, OffloadConfig, Request, ServeConfig, \
+    Scheduler
 
 
 @pytest.fixture(scope="module")
@@ -56,9 +57,7 @@ def setup():
 def _drain(eng, n_steps):
     got = {}
     for _ in range(n_steps):
-        if eng.has_prefill_work():
-            eng.prefill_step()
-        for rid, _slot, tok in eng.step_pool():
+        for rid, _slot, tok in eng.poll():
             got.setdefault(rid, []).append(tok)
     return got
 
@@ -91,14 +90,14 @@ def test_main_mesh_bitmatches_single(setup, method):
                                        ("sync", "sync", 1, 2),
                                        ("overlap", "overlap", 2, 2)):
         sc = ServeConfig(max_len=128, n_slots=2, method=method, tp=4,
-                         page=8, kv_page_size=16, offload=off,
-                         offload_shards=shards, main_mesh=mesh_n,
-                         offload_validate=(off == "overlap"),
+                         page=8, kv_page_size=16,
+                         offload_cfg=OffloadConfig(
+                             mode=off, shards=shards, main_mesh=mesh_n,
+                             validate=(off == "overlap")),
                          retrieval=_rcfg(corpus, rmode))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
-        assert all(eng.admit_many([(i, p, 6) for i, p in
-                                   enumerate(prompts)],
-                                  retrieval=[True, False]))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, 6, retrieval=(i == 0)))
         key = (off, rmode, shards, mesh_n)
         streams[key] = _drain(eng, 24)
         events[key] = [(e["slot"], tuple(e["ids"])) for e in
@@ -137,8 +136,9 @@ def test_main_mesh_under_scheduler(setup):
     for off, shards, mesh_n in (("sync", 1, 1), ("overlap", 2, 2)):
         sc = ServeConfig(max_len=128, n_slots=2, method="dsa", tp=4, page=8,
                          kv_page_size=16, prefill_chunk=16,
-                         chunk_threshold=32, offload=off,
-                         offload_shards=shards, main_mesh=mesh_n)
+                         chunk_threshold=32,
+                         offload_cfg=OffloadConfig(mode=off, shards=shards,
+                                                   main_mesh=mesh_n))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
         sch = Scheduler(eng, prefill_token_budget=32)
         rids = [sch.submit(p, max_new=4) for p in prompts]
@@ -162,11 +162,12 @@ def test_main_mesh_dense_fallback_window(setup):
     streams = {}
     for mesh_n in (1, 2):
         sc = ServeConfig(max_len=128, n_slots=2, method="dsa", tp=4,
-                         page=8, kv_page_size=16, offload="sync",
-                         main_mesh=mesh_n)
+                         page=8, kv_page_size=16,
+                         offload_cfg=OffloadConfig(mode="sync",
+                                                   main_mesh=mesh_n))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0), mem=mem)
-        assert all(eng.admit_many([(i, p, 12) for i, p in
-                                   enumerate(prompts)]))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, 12))
         streams[mesh_n] = _drain(eng, 14)
         assert eng.hetero.profiler.offload_steps > 0, \
             "run never entered the sparse window"
@@ -186,7 +187,8 @@ def test_view_buckets_align_to_mesh_granularity(setup):
     ``S % (n_shards * page_size) == 0`` at main_mesh=4 — 16 % 32 != 0."""
     cfg, params, _ = setup
     sc = ServeConfig(max_len=512, n_slots=2, method="dsa", tp=4, page=8,
-                     kv_page_size=16, offload="sync", main_mesh=4)
+                     kv_page_size=16,
+                     offload_cfg=OffloadConfig(mode="sync", main_mesh=4))
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
     ps = eng.hetero.sel.page
     old_gran = eng._gran // sc.main_mesh          # what PR 4 would bucket by
@@ -199,7 +201,7 @@ def test_view_buckets_align_to_mesh_granularity(setup):
     # functional: the smallest bucket actually decodes through the mesh
     # (pre-fix this step raised in distributed_paged_sparse_decode)
     rng = np.random.default_rng(0)
-    assert eng.admit(0, rng.integers(0, cfg.vocab_size, size=8), 4)
+    eng.submit(Request(0, rng.integers(0, cfg.vocab_size, size=8), 4))
     got = _drain(eng, 6)
     assert len(got[0]) == 4
 

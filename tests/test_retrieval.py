@@ -33,7 +33,8 @@ from repro.core.methods import offload_stages, rag as rag_m
 from repro.data import build_corpus, sample_queries
 from repro.hetero.select import make_offload_select
 from repro.retrieval import RetrievalConfig, RetrievalService
-from repro.serving import Engine, ServeConfig, Scheduler
+from repro.serving import Engine, OffloadConfig, Request, ServeConfig, \
+    Scheduler
 
 MODES = ("inline", "sync", "overlap")
 
@@ -60,11 +61,16 @@ def _free_pages_zero(pool) -> bool:
 def _drain(eng, n_steps):
     got = {}
     for _ in range(n_steps):
-        if eng.has_prefill_work():
-            eng.prefill_step()
-        for rid, _slot, tok in eng.step_pool():
+        for rid, _slot, tok in eng.poll():
             got.setdefault(rid, []).append(tok)
     return got
+
+
+def _submit_all(eng, prompts, max_new, retrieval=None):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new,
+                           retrieval=None if retrieval is None
+                           else retrieval[i]))
 
 
 def _rcfg(corpus, mode, **kw):
@@ -177,8 +183,7 @@ def test_rag_trigger_modes_bitmatch(setup):
                          kv_page_size=16,
                          retrieval=_rcfg(corpus, mode, validate=True))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
-        assert all(eng.admit_many([(i, p, 8) for i, p in
-                                   enumerate(prompts)]))
+        _submit_all(eng, prompts, 8)
         streams[mode] = _drain(eng, 26)
         events[mode] = [(e["slot"], tuple(e["ids"]), e["spliced"])
                         for e in eng.retrieval.events]
@@ -201,7 +206,7 @@ def test_inline_matches_stop_retrieve_resume_oracle(setup):
                      kv_page_size=16,
                      retrieval=_rcfg(corpus, "inline", min_interval=4))
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
-    assert eng.admit(0, prompt, max_new)
+    eng.submit(Request(0, prompt, max_new))
     stream = _drain(eng, 30)[0]
     assert len(stream) == max_new
     [event] = eng.retrieval.events
@@ -237,7 +242,7 @@ def test_trigger_gating(setup):
                      kv_page_size=16,
                      retrieval=_rcfg(corpus, "inline", tau=0.0))
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
-    assert all(eng.admit_many([(i, p, 6) for i, p in enumerate(prompts)]))
+    _submit_all(eng, prompts, 6)
     _drain(eng, 10)
     assert eng.retrieval.events == []          # never fires at tau=0
     sc2 = ServeConfig(max_len=128, n_slots=2, method="none", tp=4,
@@ -245,8 +250,7 @@ def test_trigger_gating(setup):
                       retrieval=_rcfg(corpus, "inline", tau=1.1,
                                       min_interval=2, max_retrievals=2))
     eng2 = Engine(cfg, params, sc2, key=jax.random.PRNGKey(0))
-    assert all(eng2.admit_many([(i, p, 10) for i, p in enumerate(prompts)],
-                               retrieval=[True, False]))
+    _submit_all(eng2, prompts, 10, retrieval=[True, False])
     _drain(eng2, 40)
     per_slot = {}
     for e in eng2.retrieval.events:
@@ -278,8 +282,7 @@ def test_mac_bank_modes_bitmatch(setup):
         sc = ServeConfig(max_len=128, n_slots=2, method="none", tp=4,
                          kv_page_size=16, retrieval=rcfg)
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
-        assert all(eng.admit_many([(i, p, 8) for i, p in
-                                   enumerate(prompts)]))
+        _submit_all(eng, prompts, 8)
         streams[mode] = _drain(eng, 34)
         events[mode] = [(e["slot"], tuple(e["ids"])) for e in
                         eng.retrieval.events]
@@ -308,12 +311,11 @@ def test_mixed_pool_with_hetero_offload(setup, method):
     streams = {}
     for off, rmode in (("sync", "inline"), ("overlap", "overlap")):
         sc = ServeConfig(max_len=128, n_slots=2, method=method, tp=4,
-                         page=8, kv_page_size=16, offload=off,
+                         page=8, kv_page_size=16,
+                         offload_cfg=OffloadConfig(mode=off),
                          retrieval=_rcfg(corpus, rmode))
         eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
-        assert all(eng.admit_many([(i, p, 6) for i, p in
-                                   enumerate(prompts)],
-                                  retrieval=[True, False]))
+        _submit_all(eng, prompts, 6, retrieval=[True, False])
         streams[(off, rmode)] = _drain(eng, 24)
         assert eng.retrieval.events and \
             eng.retrieval.events[0]["slot"] == 0

@@ -1,0 +1,227 @@
+"""Fleet serving: the async router over Engine replicas (serving/router).
+
+Load-bearing properties:
+
+  * FLEET BIT-MATCH: a 2-replica router serving a mixed batch (dense +
+    sparse + retrieval-enabled requests) returns, per request, EXACTLY
+    the tokens a single engine's ``generate()`` / submit+drain produces —
+    replication, device pinning and interleaved polling must not change
+    results.  Covered for the plain pool, the retrieval splice, and the
+    hetero-offload topology (the PR-3/PR-4 slots behind the router).
+  * SESSION AFFINITY: every request of a session lands on one replica;
+    different sessions spread by least-load.
+  * SHARED CORPUS: the fleet holds ONE RetrievalService — documents
+    ingested through the router are visible to every replica's triggers,
+    and a replica pair serves identical splices to a single engine using
+    the same service.
+
+CI runs this file under ``XLA_FLAGS=--xla_force_host_platform_device_count
+=4`` (the ``router`` leg: 2 replicas x 2 devices each); on fewer devices
+the replica groups overlap and every property still holds.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_arch
+from repro.data import build_corpus
+from repro.hetero import pick_devices_replicas
+from repro.models import init_params
+from repro.retrieval import RetrievalConfig
+from repro.serving import Engine, OffloadConfig, Request, Router, \
+    ServeConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("llama3.2-1b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp=4)
+    corpus = build_corpus(64, retrieval_vocab=128, doc_max=8,
+                          gen_vocab=cfg.vocab_size, embed_dim=16, seed=0)
+    return cfg, params, corpus
+
+
+def _rcfg(corpus):
+    return RetrievalConfig(mode="sync", kind="rag", corpus=corpus, k=2,
+                           trigger="flare", tau=1.1, min_interval=3,
+                           max_retrievals=1, query_window=6)
+
+
+def _prompts(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+            for n in sizes]
+
+
+def test_replica_device_groups():
+    """Replica groups partition the local devices contiguously; with fewer
+    devices than replicas the groups round-robin (always non-empty)."""
+    devs = jax.devices()
+    groups = pick_devices_replicas(2)
+    assert len(groups) == 2 and all(groups)
+    if len(devs) >= 2:
+        assert not set(groups[0]) & set(groups[1])
+        assert len(groups[0]) + len(groups[1]) <= len(devs)
+    groups = pick_devices_replicas(len(devs) + 1)
+    assert len(groups) == len(devs) + 1 and all(groups)
+
+
+def test_router_bitmatches_single_engine(setup):
+    """Mixed dense + dsa-overridden + retrieval traffic through 2 replicas
+    == the same requests through one engine, token for token."""
+    cfg, params, corpus = setup
+    sc = ServeConfig(max_len=128, n_slots=2, method="dsa", tp=4, page=8,
+                     kv_page_size=16, retrieval=_rcfg(corpus))
+    prompts = _prompts(cfg, (16, 24, 9, 32, 12, 20), seed=1)
+    reqs = [Request(i, p, 6, retrieval=(i % 3 == 0))
+            for i, p in enumerate(prompts)]
+
+    ref_eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+    refs = {}
+    for r in reqs:           # one at a time: the per-request oracle
+        ref_eng.submit(r)
+        ref_eng.drain()
+        refs[r.rid] = list(ref_eng.done.pop(r.rid).tokens)
+
+    router = Router.build(cfg, params, sc, n_replicas=2,
+                          key=jax.random.PRNGKey(0))
+    assert len(router.replicas) == 2
+    assert router.service is not None            # ONE corpus for the fleet
+    svcs = {id(r.engine.retrieval.service) for r in router.replicas}
+    assert svcs == {id(router.service)}
+    hs = [router.submit(r) for r in reqs]
+    done = router.drain()
+    assert sorted(done) == sorted(r.rid for r in reqs)
+    for h in hs:
+        assert h.done and h.replica is not None
+        np.testing.assert_array_equal(np.asarray(h.tokens),
+                                      np.asarray(refs[h.rid]))
+        assert h.ttft_s() is not None and h.ttft_s() >= 0
+    # both replicas actually served
+    assert {h.replica for h in hs} == {0, 1}
+
+
+def test_router_bitmatches_with_hetero_offload(setup):
+    """The offload topology behind the router: each replica runs the
+    2-phase offload executor on its own device group and still serves the
+    single-engine streams."""
+    cfg, params, _ = setup
+    sc = ServeConfig(max_len=64, n_slots=2, method="dsa", tp=4, page=8,
+                     kv_page_size=16,
+                     offload_cfg=OffloadConfig(mode="overlap"))
+    prompts = _prompts(cfg, (16, 9, 24, 12), seed=2)
+    ref_eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
+    refs = [ref_eng.generate(p[None], 5)[0] for p in prompts]
+
+    router = Router.build(cfg, params, sc, n_replicas=2,
+                          key=jax.random.PRNGKey(0))
+    hs = [router.submit(Request(i, p, 5)) for i, p in enumerate(prompts)]
+    router.drain()
+    for h, want in zip(hs, refs):
+        assert h.done
+        np.testing.assert_array_equal(np.asarray(h.tokens, np.int32), want)
+    for r in router.replicas:
+        assert r.engine.pool.pages_in_use() == 0
+
+
+def test_session_affinity_and_load_balance(setup):
+    """All requests of one session stick to one replica; sessionless
+    traffic spreads to the least-loaded replica."""
+    cfg, params, _ = setup
+    sc = ServeConfig(max_len=64, n_slots=2, method="none", tp=4,
+                     kv_page_size=16)
+    router = Router.build(cfg, params, sc, n_replicas=2,
+                          key=jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, (8, 8, 8, 8, 8, 8), seed=3)
+    sessions = ["a", "b", "a", None, "b", "a"]
+    hs = [router.submit(Request(i, p, 3, session=s))
+          for i, (p, s) in enumerate(zip(prompts, sessions))]
+    by_session = {}
+    for h, s in zip(hs, sessions):
+        if s is not None:
+            by_session.setdefault(s, set()).add(h.replica)
+    assert all(len(v) == 1 for v in by_session.values())
+    assert len({h.replica for h in hs}) == 2     # load actually spread
+    done = router.drain()
+    assert len(done) == len(hs) and all(h.done for h in hs)
+    rep = router.report()
+    assert rep["requests_done"] == 6 and rep["sessions"] == 2
+    assert all(r["polls"] > 0 for r in rep["replicas"])
+
+
+def test_method_override_pins_replica(setup):
+    """A heterogeneous fleet (none + dsa) routes ``method_overrides
+    ['method']`` pins to the matching replica."""
+    cfg, params, _ = setup
+    base = dict(max_len=64, n_slots=2, tp=4, kv_page_size=16)
+    cfgs = [ServeConfig(method="none", **base),
+            ServeConfig(method="dsa", page=8, **base)]
+    router = Router.build(cfg, params, cfgs, key=jax.random.PRNGKey(0))
+    prompts = _prompts(cfg, (8, 8, 8, 8), seed=4)
+    hs = [router.submit(Request(i, p, 3,
+                                method_overrides={"method": m}))
+          for i, (p, m) in enumerate(zip(prompts,
+                                         ["dsa", "none", "dsa", "none"]))]
+    assert [h.replica for h in hs] == [1, 0, 1, 0]
+    router.drain()
+    assert all(h.done for h in hs)
+
+
+def test_shared_corpus_ingest_visible_to_all_replicas(setup):
+    """Documents ingested through the router join the one shared corpus;
+    a replica pair using that corpus serves the same splice a single
+    engine does, before AND after the ingest."""
+    cfg, params, corpus = setup
+    sc = ServeConfig(max_len=128, n_slots=2, method="none", tp=4,
+                     kv_page_size=16, retrieval=_rcfg(corpus))
+    router = Router.build(cfg, params, sc, n_replicas=2,
+                          key=jax.random.PRNGKey(0))
+    n0 = router.service.n_docs
+    extra = build_corpus(16, retrieval_vocab=128, doc_max=8,
+                         gen_vocab=cfg.vocab_size, embed_dim=16, seed=9)
+    router.ingest(extra)
+    assert router.service.n_docs == n0 + 16
+    for r in router.replicas:    # every replica sees the grown corpus
+        assert r.engine.retrieval.service.n_docs == n0 + 16
+
+    # single engine on the SAME shared service == fleet, post-ingest
+    ref_sc = ServeConfig(
+        max_len=128, n_slots=2, method="none", tp=4, kv_page_size=16,
+        retrieval=RetrievalConfig(
+            mode="sync", kind="rag", corpus=corpus, k=2, trigger="flare",
+            tau=1.1, min_interval=3, max_retrievals=1, query_window=6,
+            service=router.service))
+    ref_eng = Engine(cfg, params, ref_sc, key=jax.random.PRNGKey(0))
+    assert ref_eng.retrieval.service is router.service
+    prompts = _prompts(cfg, (16, 24), seed=5)
+    refs = {}
+    for i, p in enumerate(prompts):
+        ref_eng.submit(Request(i, p, 8, retrieval=True))
+        ref_eng.drain()
+        refs[i] = list(ref_eng.done.pop(i).tokens)
+    hs = [router.submit(Request(i, p, 8, retrieval=True))
+          for i, p in enumerate(prompts)]
+    router.drain()
+    for h in hs:
+        assert h.done
+        np.testing.assert_array_equal(np.asarray(h.tokens),
+                                      np.asarray(refs[h.rid]))
+    assert any(r.engine.retrieval.events for r in router.replicas)
+    rep = router.report()
+    assert rep["shared_corpus"]["n_docs"] == n0 + 16
+
+
+def test_request_surface_validation():
+    """The typed admission surface rejects malformed requests loudly."""
+    tok = np.arange(4, dtype=np.int32)
+    with pytest.raises(ValueError):
+        Request(0, tok, 0)                       # max_new < 1
+    with pytest.raises(ValueError):
+        Request(0, np.zeros((2, 2), np.int32), 3)   # not 1-D
+    with pytest.raises(ValueError):
+        Request(0, tok, 3, method_overrides={"bogus": 1})
+    r = Request(1, tok, 3, method_overrides={"chunked": True})
+    assert r.override("chunked") and r.override("method") is None
+    assert len(r) == 4
+    with pytest.raises(ValueError):
+        r.tokens[0] = 5                          # frozen token buffer

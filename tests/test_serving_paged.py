@@ -2,7 +2,8 @@
 token streams identical to per-request ``Engine.generate`` (dense and
 sparse), pages must not leak across admit/release cycles, chunked prefill
 must match one-shot prefill, and the scheduler must drain mixed workloads
-over the paged pool."""
+over the paged pool. All admission goes through the request-level API
+(``Engine.submit(Request)`` + ``poll``)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -10,7 +11,8 @@ import pytest
 
 from repro.configs import get_arch
 from repro.models import init_params
-from repro.serving import Engine, PagedKVPool, ServeConfig, Scheduler
+from repro.serving import Engine, PagedKVPool, Request, ServeConfig, \
+    Scheduler
 
 
 @pytest.fixture(scope="module")
@@ -23,9 +25,7 @@ def setup():
 def _drain(eng, n_steps):
     got = {}
     for _ in range(n_steps):
-        if eng.has_prefill_work():
-            eng.prefill_step()
-        for rid, _slot, tok in eng.step_pool():
+        for rid, _slot, tok in eng.poll():
             got.setdefault(rid, []).append(tok)
     return got
 
@@ -44,17 +44,19 @@ def test_pooled_decode_matches_per_request_generate(setup, method):
                for n in (16, 32, 9)]
     max_new = 6
     refs = [ref.generate(jnp.asarray(p)[None], max_new)[0] for p in prompts]
-    oks = eng.admit_many([(i, p, max_new) for i, p in enumerate(prompts)])
-    assert all(oks)
+    hs = [eng.submit(Request(i, p, max_new)) for i, p in enumerate(prompts)]
     got = _drain(eng, max_new + 1)
+    assert all(h.done for h in hs)
     for i in range(len(prompts)):
         np.testing.assert_array_equal(np.asarray(got[i][:max_new]), refs[i])
+        np.testing.assert_array_equal(np.asarray(hs[i].tokens), refs[i])
     assert eng.pool.pages_in_use() == 0  # all pages released at completion
 
 
 def test_staggered_admission_and_page_reuse(setup):
     """Admission mid-decode reuses released pages; token streams stay exact
-    even though slots sit at heterogeneous positions."""
+    even though slots sit at heterogeneous positions. Requests beyond the
+    slot count queue at submit and admit as slots free."""
     cfg, params = setup
     sc = ServeConfig(max_len=96, n_slots=2, method="none", tp=4,
                      kv_page_size=16, pool_pages=2 * (96 // 16) + 1)
@@ -64,17 +66,18 @@ def test_staggered_admission_and_page_reuse(setup):
     prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
                for n in (16, 24, 40, 8)]
     refs = [ref.generate(jnp.asarray(p)[None], 5)[0] for p in prompts]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, 5))
     got = {}
-    assert eng.admit(0, prompts[0], 5)
-    assert eng.admit(1, prompts[1], 5)
-    assert not eng.admit(2, prompts[2], 5)  # no free slot: clean rejection
-    nxt = 2
-    for _ in range(16):
-        for rid, _slot, tok in eng.step_pool():
+    for rid, _slot, tok in eng.poll():
+        got.setdefault(rid, []).append(tok)
+    # only two slots: requests 2 and 3 stay queued (clean rejection,
+    # re-queued at the front in FCFS order)
+    assert eng.queue_depth() == 2
+    assert sorted(got) == [0, 1]
+    for _ in range(15):
+        for rid, _slot, tok in eng.poll():
             got.setdefault(rid, []).append(tok)
-        if nxt < 4 and eng.slots.free_slots():
-            assert eng.admit(nxt, prompts[nxt], 5)
-            nxt += 1
     for i in range(4):
         np.testing.assert_array_equal(np.asarray(got[i][:5]), refs[i])
     assert eng.pool.pages_in_use() == 0
@@ -91,12 +94,15 @@ def test_pages_do_not_leak_across_admit_release_cycles(setup):
     rid = 0
     for cycle in range(3):
         for n in (10, 20):
-            assert eng.admit(rid, rng.integers(0, cfg.vocab_size, size=n), 3)
+            eng.submit(Request(
+                rid, rng.integers(0, cfg.vocab_size, size=n), 3))
             rid += 1
+        eng.poll()   # admits both queued requests, then one decode step
+        assert eng.queue_depth() == 0
         in_use = eng.pool.pages_in_use()
         assert in_use == eng.pool.pages_needed(10 + 3) + \
             eng.pool.pages_needed(20 + 3)
-        _drain(eng, 4)
+        _drain(eng, 3)
         assert eng.pool.pages_in_use() == 0
         free = eng.pool.free
         assert len(free) == len(set(free)) == eng.pool.total_pages - 1
@@ -112,19 +118,24 @@ def test_pool_oversubscription_blocks_then_admits(setup):
                      kv_page_size=16, pool_pages=4)
     eng = Engine(cfg, params, sc, key=jax.random.PRNGKey(0))
     rng = np.random.default_rng(3)
-    assert eng.admit(0, rng.integers(0, cfg.vocab_size, size=40), 4)
+    h0 = eng.submit(Request(0, rng.integers(0, cfg.vocab_size, size=40), 4))
+    h1 = eng.submit(Request(1, rng.integers(0, cfg.vocab_size, size=10), 4))
+    eng.poll()
     assert eng.pool.n_free() == 0
-    # a free slot exists but no pages: must reject
+    # a free slot exists but no pages: request 1 must stay queued
     assert eng.slots.free_slots()
-    assert not eng.admit(1, rng.integers(0, cfg.vocab_size, size=10), 4)
-    _drain(eng, 5)
+    assert eng.queue_depth() == 1 and not h1.tokens
+    done = eng.drain()
+    assert sorted(done) == [0, 1]
+    assert h0.done and h1.done
     assert eng.pool.n_free() == 3
-    assert eng.admit(1, rng.integers(0, cfg.vocab_size, size=10), 4)
 
 
 def test_chunked_prefill_matches_one_shot(setup):
     """A long prompt streamed in chunks (interleaved with another slot's
-    decode) produces the same tokens as one-shot prefill + generate."""
+    decode) produces the same tokens as one-shot prefill + generate; the
+    admission path picks chunked mode from ``chunk_threshold`` (and a
+    ``method_overrides`` pin can force it)."""
     cfg, params = setup
     sc = ServeConfig(max_len=128, n_slots=2, method="none", tp=4,
                      kv_page_size=16, prefill_chunk=16, chunk_threshold=24)
@@ -135,8 +146,9 @@ def test_chunked_prefill_matches_one_shot(setup):
     short = rng.integers(0, cfg.vocab_size, size=16).astype(np.int32)
     r_long = ref.generate(jnp.asarray(long_prompt)[None], 5)[0]
     r_short = ref.generate(jnp.asarray(short)[None], 5)[0]
-    assert eng.admit_chunked(0, long_prompt, 5)
-    assert eng.admit(1, short, 5)
+    eng.submit(Request(0, long_prompt, 5,
+                       method_overrides={"chunked": True}))
+    eng.submit(Request(1, short, 5))
     got = _drain(eng, 12)
     np.testing.assert_array_equal(np.asarray(got[0][:5]), r_long)
     np.testing.assert_array_equal(np.asarray(got[1][:5]), r_short)
